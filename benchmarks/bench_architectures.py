@@ -1,0 +1,60 @@
+"""Paper Fig. 2 / §3.1: the three vector-search placement architectures
+under a full PD-disaggregated serving simulation.
+
+Uses a real full-size model config for the timing model (deepseek-moe-16b:
+the EP-displacement argument of §3.1(a) needs an MoE) and the real vector
+pool for retrievals. Placements:
+  (a) coupled        — ICI-latency retrieval, but each P/D server loses one
+                       chip (capacity ×7/8), EP dispatch partially crosses
+                       DCN (+µs per decode step), HBM contention
+  (b) prefill_coloc  — prefill keeps ICI retrieval, decode pays DCN;
+                       prefill capacity loss + contention
+  (c) disaggregated  — Trinity: DCN retrieval for both, full LLM capacity
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_index, bench_pool_cfg, emit
+from repro.configs import get_config
+from repro.serving.cluster import ClusterSim
+from repro.serving.request import GenRequest
+
+
+def run(emit_rows: bool = True, n_requests: int = 64, duration: float = 60.0):
+    pool_cfg = bench_pool_cfg(max_requests=32)
+    db, queries, graph = bench_index(pool_cfg)
+    model_cfg = get_config("deepseek-moe-16b")
+
+    rows, out = [], {}
+    for placement in ("coupled", "prefill_coloc", "disaggregated"):
+        sim = ClusterSim(model_cfg, pool_cfg, db, graph,
+                         placement=placement, policy="trinity",
+                         n_prefill=2, n_decode=4, decode_batch=32,
+                         chips_per_instance=8)
+        rng = np.random.default_rng(8)
+        t = 0.0
+        for i in range(n_requests):
+            t += float(rng.exponential(0.05))
+            sim.arrive(GenRequest(i, prompt_len=int(rng.integers(512, 4096)),
+                                  max_new_tokens=64, t_arrival=t,
+                                  rag_interval=16))
+        sim.run(t + duration)
+        s = sim.metrics.summary(t + duration)
+        vec = sim.vector_pool.metrics
+        rows += [
+            (placement, "ttft_p95_ms", round(s["ttft_p95"] * 1e3, 3)),
+            (placement, "tpot_p95_ms", round(s["tpot_p95"] * 1e3, 3)),
+            (placement, "throughput_tok_s", round(s["throughput_tok_s"], 1)),
+            (placement, "decode_stall_frac", round(s["decode_stall_frac"], 4)),
+            (placement, "retrieval_p95_ms", round(vec.p(95) * 1e3, 3)),
+            (placement, "requests_done", s["requests"]),
+        ]
+        out[placement] = s
+    if emit_rows:
+        emit(rows, ("placement", "metric", "value"))
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,44 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs.base import VectorPoolConfig  # noqa: E402
+from repro.vector.dataset import make_dataset  # noqa: E402
+from repro.vector.graph import make_cagra_graph  # noqa: E402
+
+_CACHE = {}
+
+
+def bench_pool_cfg(**kw) -> VectorPoolConfig:
+    base = dict(num_vectors=4000, dim=64, graph_degree=16, max_requests=32,
+                top_m=32, parents_per_step=2, task_batch=1024,
+                visited_slots=512, top_k=10)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+def bench_index(cfg: VectorPoolConfig, seed: int = 11):
+    key = (cfg.num_vectors, cfg.dim, cfg.graph_degree, seed)
+    if key not in _CACHE:
+        db, queries = make_dataset(cfg.num_vectors, cfg.dim, num_clusters=32,
+                                   num_queries=512, seed=seed)
+        graph = make_cagra_graph(db, cfg.graph_degree, seed=seed)
+        _CACHE[key] = (db, queries, graph)
+    return _CACHE[key]
+
+
+def emit(rows, header=("name", "metric", "value")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def poisson_arrivals(rate_qps: float, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))

@@ -1,0 +1,87 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table and pick hillclimbing candidates.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod_16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")})
+            continue
+        r = rec["roofline"]
+        mem = rec["memory_analysis"]
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: r[k])
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": dom,
+            "roofline_frac": r[dom] and max(r["compute_s"], r["memory_s"])
+            and r["compute_s"] / max(total, 1e-30),
+            "useful": r["useful_fraction"],
+            "temp_gb": mem["temp_size"] / 1e9,
+            "arg_gb": mem["argument_size"] / 1e9,
+        })
+    return rows
+
+
+def table(rows, fmt: str = "md"):
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "roofline_frac", "useful", "temp_gb", "arg_gb"]
+    out = []
+    if fmt == "md":
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: {r['error']} |")
+            continue
+        vals = [r["arch"], r["shape"],
+                f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                f"{r['collective_s']:.3e}", r["bottleneck"],
+                f"{r['roofline_frac']:.3f}", f"{r['useful']:.2f}",
+                f"{r['temp_gb']:.1f}", f"{r['arg_gb']:.2f}"]
+        out.append("| " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
+def candidates(rows):
+    """worst roofline fraction / most collective-bound / paper-representative."""
+    ok = [r for r in rows if "error" not in r]
+    worst = min(ok, key=lambda r: r["roofline_frac"])
+    coll = max(ok, key=lambda r: r["collective_s"]
+               / max(r["compute_s"] + r["memory_s"] + r["collective_s"], 1e-30))
+    # paper-representative: decode of the MoE flagship (PD-disaggregation's
+    # decode pool + EP, the paper's §3.1 subject)
+    rep = next(r for r in ok if r["arch"] == "deepseek-v3-671b"
+               and r["shape"] == "decode_32k")
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod_16x16")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    print(table(rows))
+    print()
+    for k, v in candidates(rows).items():
+        print(f"{k}: {v['arch']} × {v['shape']} "
+              f"(frac={v['roofline_frac']:.3f}, dom={v['bottleneck']})")

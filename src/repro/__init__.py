@@ -1,0 +1,7 @@
+"""Trinity: disaggregated vector search for PD-disaggregated LLM serving.
+
+JAX/Pallas-TPU reproduction of Liu & Qian (UCSC, 2025). See DESIGN.md for
+the system inventory and EXPERIMENTS.md for the validation + roofline
+report. Public entry points: repro.core (the paper's contribution),
+repro.launch (mesh / dryrun / train / serve), repro.configs (--arch ids).
+"""

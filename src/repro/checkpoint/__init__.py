@@ -1,0 +1,2 @@
+"""Sharded atomic checkpointing (fault-tolerance substrate)."""
+from repro.checkpoint.checkpointer import Checkpointer  # noqa

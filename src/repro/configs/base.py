@@ -1,0 +1,189 @@
+"""Config dataclasses for models, shapes, meshes and the Trinity vector pool.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (full published size) and ``SMOKE_CONFIG`` (reduced, CPU-runnable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts sub-config (fine-grained, shared + routed)."""
+
+    num_experts: int  # routed experts
+    num_shared_experts: int  # always-on shared experts
+    top_k: int  # routed experts activated per token
+    expert_ffn: int  # d_ff of each routed expert
+    shared_ffn: int = 0  # d_ff of the shared expert(s); 0 => expert_ffn
+    router_dtype: str = "float32"
+    capacity_factor: float = 1.25  # dispatch capacity per expert
+
+    @property
+    def shared_ffn_dim(self) -> int:
+        return self.shared_ffn or self.expert_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention sub-config."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture (published numbers; see configs/<id>.py)."""
+
+    name: str
+    family: str  # "dense" | "moe" | "hybrid" | "ssm" | "audio" | "vlm"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+    # block structure
+    block_kind: str = "attn"  # "attn" | "mamba_attn" | "xlstm" | "encdec"
+    attn_kind: str = "gqa"  # "gqa" | "mla"
+    mlp_kind: str = "swiglu"  # "swiglu" | "geglu" | "moe" | "none"
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1  # MoE FFN on layers where (idx % moe_every == 0)
+    mla: Optional[MLAConfig] = None
+    # misc published details
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # MTP (deepseek-v3 multi-token prediction)
+    mtp_depth: int = 0
+    # hybrid (jamba): one attention layer every `attn_every` layers
+    attn_every: int = 0
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # xlstm: pattern of block kinds, cycled over layers
+    xlstm_pattern: Tuple[str, ...] = ()
+    # enc-dec split (seamless): encoder layers + decoder layers = num_layers
+    encoder_layers: int = 0
+    # modality frontend stub: inputs arrive as precomputed embeddings
+    frontend: str = "none"  # "none" | "audio" | "vision"
+    frontend_tokens: int = 0  # embeddings prepended by the stub frontend
+    max_seq_len: int = 32768
+    dtype: str = "bfloat16"
+    # attention scaling for sub-quadratic support declaration
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        from repro.models.model_zoo import analytic_param_count
+
+        return analytic_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model_zoo import analytic_param_count
+
+        return analytic_param_count(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned 4-shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shapes_for(cfg: ModelConfig):
+    """The applicable shape list for an architecture (skips documented in
+    DESIGN.md §Arch-applicability)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.subquadratic:
+        out.append(LONG_500K)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trinity vector-pool config (paper §3.2/§3.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorPoolConfig:
+    """Continuous-batching ANN engine + two-queue scheduler parameters."""
+
+    # dataset / index
+    num_vectors: int = 100_000
+    dim: int = 128
+    graph_degree: int = 16  # D: fixed out-degree
+    metric: str = "l2"  # "l2" | "ip"
+    # engine (per §3.2)
+    max_requests: int = 64  # running-batch slot count
+    top_m: int = 32  # internal candidate list size (topM)
+    parents_per_step: int = 2  # p: parents expanded per request per extend
+    task_batch: int = 2048  # fixed distance-kernel shape (padded w/ dummies)
+    visited_slots: int = 2048  # open-addressing visited table size per slot
+    search_width: int = 1  # initial random entry points multiplier
+    top_k: int = 10  # results returned
+    # scheduler (per §3.3)
+    r_min: float = 0.1
+    r_max: float = 0.9
+    r_init: float = 0.3
+    tau_pre_ms: float = 0.5  # prefill flush timeout
+    tau_global_ms: float = 2.0  # global flush timeout
+    prefill_deadline_ms: float = 25.0  # L_pre,max
+    decode_deadline_ms: float = 100.0
+    control_interval_ms: float = 200.0  # adaptive control loop period
+    # hardware model (TPU v5e-class, assigned constants)
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))

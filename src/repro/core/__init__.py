@@ -1,0 +1,13 @@
+"""Trinity core: the paper's contribution.
+
+  continuous_batching — §3.2 extend-step engine with the fixed-shape
+                        global distance stage (Pallas kernel on TPU)
+  scheduler           — §3.3 two-queue EDF/FIFO scheduling + adaptive r/τ
+  trinity_pool        — shared vector-search pool (replicas, stragglers,
+                        elasticity, failures)
+  architectures       — §3.1 Fig. 2 placement study
+  roofline_model      — §2 utilisation model + calibrated step timing
+"""
+from repro.core.continuous_batching import ContinuousBatchingEngine  # noqa
+from repro.core.scheduler import TwoQueueScheduler, VectorRequest  # noqa
+from repro.core.trinity_pool import VectorPool  # noqa

@@ -1,0 +1,191 @@
+"""Trinity §3.3: latency-aware two-queue scheduling for the vector pool.
+
+  · Q_pre  (prefill retrievals)  — EDF with slack  ddl − (t_now + Ẽ·T_ext),
+    short flush timeout τ_pre, first-class latency protection (TTFT).
+  · Q_dec  (decode RAG probes)   — FIFO, absorbs remaining capacity.
+  · Batch builder: N = free engine slots; reserve ⌈r·N⌉ for Q_pre with
+    unused share immediately donated to Q_dec; engine pads the remainder
+    with masked dummies (fixed kernel shape).
+  · Adaptive control loop (every control_interval): steer r and τ_pre from
+    real-time feedback — KV-link utilisation u_kv vs target, prefill P95
+    wait (TTFT proxy), decode RAG-stall fraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class VectorRequest:
+    rid: int
+    kind: str  # "prefill" | "decode"
+    qvec: np.ndarray
+    t_arrival: float
+    deadline: float
+    est_extends: float = 16.0  # Ẽ
+    t_admitted: Optional[float] = None
+    t_completed: Optional[float] = None
+    extends_used: int = 0
+    result_ids: Optional[np.ndarray] = None
+
+    @property
+    def wait(self) -> float:
+        return (self.t_admitted or self.t_arrival) - self.t_arrival
+
+
+class PrefillQueue:
+    """EDF + slack-driven selection (exact O(n log n) over a short queue)."""
+
+    def __init__(self):
+        self._items: List[VectorRequest] = []
+
+    def push(self, r: VectorRequest):
+        self._items.append(r)
+
+    def __len__(self):
+        return len(self._items)
+
+    def oldest_arrival(self) -> Optional[float]:
+        return min((r.t_arrival for r in self._items), default=None)
+
+    def pop_by_slack(self, n: int, t_now: float, t_ext: float) -> List[VectorRequest]:
+        if n <= 0 or not self._items:
+            return []
+        self._items.sort(key=lambda r: r.deadline - (t_now + r.est_extends * t_ext))
+        out, self._items = self._items[:n], self._items[n:]
+        return out
+
+
+class DecodeQueue:
+    def __init__(self):
+        self._q: deque[VectorRequest] = deque()
+
+    def push(self, r: VectorRequest):
+        self._q.append(r)
+
+    def __len__(self):
+        return len(self._q)
+
+    def pop_fifo(self, n: int) -> List[VectorRequest]:
+        return [self._q.popleft() for _ in range(min(n, len(self._q)))]
+
+
+@dataclasses.dataclass
+class ControllerFeedback:
+    u_kv: float = 1.0  # KV-link utilisation (vs its target)
+    u_kv_target: float = 0.9
+    prefill_p95_wait: float = 0.0
+    prefill_wait_budget: float = 0.005
+    decode_stall_frac: float = 0.0
+    decode_stall_budget: float = 0.15
+
+
+class AdaptiveController:
+    """Paper: 'increases r or shortens τ_pre when u_kv < u_kv*; rising
+    decode stalls decrease r so Q_dec occupies more of N'."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.r = cfg.r_init
+        self.tau_pre = cfg.tau_pre_ms / 1e3
+        self.last_update = 0.0
+        self.history: List[Tuple[float, float, float]] = []
+
+    def maybe_update(self, t_now: float, fb: ControllerFeedback):
+        if t_now - self.last_update < self.cfg.control_interval_ms / 1e3:
+            return
+        self.last_update = t_now
+        r_step = 0.05
+        starved_prefill = (fb.u_kv < fb.u_kv_target
+                           or fb.prefill_p95_wait > fb.prefill_wait_budget)
+        stalled_decode = fb.decode_stall_frac > fb.decode_stall_budget
+        if starved_prefill and not stalled_decode:
+            self.r = min(self.cfg.r_max, self.r + r_step)
+            self.tau_pre = max(self.tau_pre * 0.8, 1e-4)
+        elif stalled_decode and not starved_prefill:
+            self.r = max(self.cfg.r_min, self.r - r_step)
+            self.tau_pre = min(self.tau_pre * 1.25, self.cfg.tau_global_ms / 1e3)
+        # both or neither pressured: hold (hysteresis)
+        self.history.append((t_now, self.r, self.tau_pre))
+
+
+class TwoQueueScheduler:
+    """Builds (n_pre, n_dec) admission batches for the engine."""
+
+    def __init__(self, cfg, policy: str = "trinity"):
+        assert policy in ("trinity", "prefill_first", "decode_first",
+                          "fifo_shared")
+        self.cfg = cfg
+        self.policy = policy
+        self.q_pre = PrefillQueue()
+        self.q_dec = DecodeQueue()
+        self.controller = AdaptiveController(cfg)
+        self.t_ext_ewma = 20e-6  # measured mean extend latency T_ext
+        self._shared_fifo: deque[VectorRequest] = deque()
+
+    # -- queue ops ---------------------------------------------------------
+    def submit(self, r: VectorRequest):
+        if self.policy == "fifo_shared":
+            self._shared_fifo.append(r)
+        elif r.kind == "prefill":
+            self.q_pre.push(r)
+        else:
+            self.q_dec.push(r)
+
+    def queued(self) -> int:
+        return len(self.q_pre) + len(self.q_dec) + len(self._shared_fifo)
+
+    def observe_extend_latency(self, t: float):
+        self.t_ext_ewma = 0.9 * self.t_ext_ewma + 0.1 * t
+
+    # -- batch builder (paper Fig. 4) ---------------------------------------
+    def select(self, n_slots: int, t_now: float) -> List[VectorRequest]:
+        if n_slots <= 0:
+            return []
+        if self.policy == "fifo_shared":
+            out = [self._shared_fifo.popleft()
+                   for _ in range(min(n_slots, len(self._shared_fifo)))]
+        elif self.policy == "prefill_first":
+            out = self.q_pre.pop_by_slack(n_slots, t_now, self.t_ext_ewma)
+            out += self.q_dec.pop_fifo(n_slots - len(out))
+        elif self.policy == "decode_first":
+            out = self.q_dec.pop_fifo(n_slots)
+            out += self.q_pre.pop_by_slack(n_slots - len(out), t_now,
+                                           self.t_ext_ewma)
+        else:  # trinity
+            r = self.controller.r
+            n_pre_res = min(math.ceil(r * n_slots), n_slots)
+            pre = self.q_pre.pop_by_slack(n_pre_res, t_now, self.t_ext_ewma)
+            # unused prefill share is immediately given to decode
+            dec = self.q_dec.pop_fifo(n_slots - len(pre))
+            # any still-free slots go back to prefill backlog
+            pre += self.q_pre.pop_by_slack(n_slots - len(pre) - len(dec),
+                                           t_now, self.t_ext_ewma)
+            out = pre + dec
+        for req in out:
+            req.t_admitted = t_now
+        return out
+
+    def should_flush(self, t_now: float, free_slots: int, active: int) -> bool:
+        """Launch/admit decision: full batch, τ_pre for urgent prefill, or
+        the global flush timeout."""
+        if free_slots == 0:
+            return False
+        if self.queued() >= free_slots:
+            return True
+        oldest_pre = self.q_pre.oldest_arrival()
+        if oldest_pre is not None and \
+                t_now - oldest_pre >= self.controller.tau_pre:
+            return True
+        oldest = [r.t_arrival for r in
+                  list(self._shared_fifo) + self.q_pre._items
+                  + list(self.q_dec._q)]
+        if oldest and t_now - min(oldest) >= self.cfg.tau_global_ms / 1e3:
+            return True
+        # keep the engine busy rather than idle if it has spare slots
+        return active == 0 and self.queued() > 0

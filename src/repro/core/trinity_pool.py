@@ -1,0 +1,183 @@
+"""The shared vector-search pool: engine replicas × two-queue scheduler ×
+adaptive controller, advanced in (simulated or wall-clock) time.
+
+Pool-level features beyond the paper's minimum, needed at 1000-node scale:
+  · data-parallel engine replicas with least-loaded dispatch,
+  · straggler mitigation: per-replica extend-latency EWMA; replicas slower
+    than ``straggler_factor``× the median stop receiving new admissions
+    until they recover (in-flight work finishes, nothing is lost),
+  · elastic scaling: queue-depth controller adds/removes replicas between
+    ``min_replicas`` and ``max_replicas``,
+  · failure handling: ``kill_replica`` re-queues its in-flight requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import roofline_model
+from repro.core.continuous_batching import ContinuousBatchingEngine
+from repro.core.scheduler import (ControllerFeedback, TwoQueueScheduler,
+                                  VectorRequest)
+
+
+@dataclasses.dataclass
+class PoolMetrics:
+    completed: List[VectorRequest] = dataclasses.field(default_factory=list)
+    extend_steps: int = 0
+    tasks_emitted: int = 0
+    tasks_capacity: int = 0
+
+    def latencies(self, kind: Optional[str] = None) -> np.ndarray:
+        xs = [r.t_completed - r.t_arrival for r in self.completed
+              if r.t_completed is not None and (kind is None or r.kind == kind)]
+        return np.asarray(xs) if xs else np.zeros(0)
+
+    def p(self, q: float, kind: Optional[str] = None) -> float:
+        lat = self.latencies(kind)
+        return float(np.percentile(lat, q)) if lat.size else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        return self.tasks_emitted / max(self.tasks_capacity, 1)
+
+
+class _Replica:
+    def __init__(self, rid: int, cfg, db, graph, use_pallas, seed):
+        self.rid = rid
+        self.engine = ContinuousBatchingEngine(cfg, db, graph,
+                                               use_pallas=use_pallas,
+                                               seed=seed)
+        self.clock = 0.0
+        self.ext_latency_ewma = roofline_model.extend_time(cfg)
+        self.slowdown = 1.0  # >1 = straggling hardware
+        self.quarantined = False
+        self.in_flight: Dict[int, VectorRequest] = {}
+
+
+class VectorPool:
+    def __init__(self, cfg, db, graph, *, replicas: int = 1,
+                 policy: str = "trinity", use_pallas: Optional[bool] = None,
+                 min_replicas: int = 1, max_replicas: int = 8,
+                 straggler_factor: float = 2.5, elastic: bool = False,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.db = db
+        self.graph = graph
+        self.scheduler = TwoQueueScheduler(cfg, policy=policy)
+        self.replicas: List[_Replica] = [
+            _Replica(i, cfg, db, graph, use_pallas, seed + i)
+            for i in range(replicas)]
+        self._next_rid = replicas
+        self.metrics = PoolMetrics()
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.straggler_factor = straggler_factor
+        self.elastic = elastic
+        self.feedback = ControllerFeedback()
+        self._use_pallas = use_pallas
+        self._seed = seed
+        self._pending: list = []  # (t_arrival, tiebreak, request) heap
+        self.peak_replicas = replicas
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: VectorRequest):
+        """Requests become visible to the scheduler at their arrival time
+        (event-driven semantics)."""
+        heapq.heappush(self._pending, (req.t_arrival, id(req), req))
+
+    def _release_pending(self, t_now: float):
+        while self._pending and self._pending[0][0] <= t_now:
+            _, _, req = heapq.heappop(self._pending)
+            self.scheduler.submit(req)
+
+    def run_until(self, t_end: float):
+        """Advance every replica's clock to t_end, stepping engines whenever
+        the scheduler decides to flush admissions or work is active."""
+        while True:
+            rep = min((r for r in self.replicas), key=lambda r: r.clock)
+            if rep.clock >= t_end:
+                break
+            self._release_pending(rep.clock)
+            self._step_replica(rep, t_end)
+        self._maybe_scale(t_end)
+
+    def kill_replica(self, idx: int):
+        """Fail-stop: in-flight requests re-queue (at their original
+        arrival time — latency accounting keeps the failure cost)."""
+        rep = self.replicas.pop(idx)
+        for req in rep.in_flight.values():
+            req.t_admitted = None
+            self.scheduler.submit(req)
+
+    def add_replica(self):
+        self.replicas.append(_Replica(self._next_rid, self.cfg, self.db,
+                                      self.graph, self._use_pallas,
+                                      self._seed + self._next_rid))
+        self.replicas[-1].clock = max(r.clock for r in self.replicas[:-1])
+        self._next_rid += 1
+
+    def set_slowdown(self, idx: int, factor: float):
+        self.replicas[idx].slowdown = factor
+
+    # -------------------------------------------------------------- internals
+    def _healthy(self, rep: _Replica) -> bool:
+        med = np.median([r.ext_latency_ewma for r in self.replicas])
+        rep.quarantined = rep.ext_latency_ewma > self.straggler_factor * med
+        return not rep.quarantined
+
+    def _step_replica(self, rep: _Replica, t_end: float):
+        t = rep.clock
+        self.scheduler.controller.maybe_update(t, self.feedback)
+        self._maybe_scale(t)
+
+        free = rep.engine.num_free
+        if self._healthy(rep) and \
+                self.scheduler.should_flush(t, free, rep.engine.num_active):
+            for req in self.scheduler.select(free, t):
+                slot_rid = req.rid
+                rep.engine.admit(slot_rid, req.qvec)
+                rep.in_flight[slot_rid] = req
+
+        if rep.engine.num_active == 0:
+            # idle: jump to the next arrival (or a small quantum / t_end)
+            if self.scheduler.queued() > 0:
+                rep.clock = t + self.scheduler.controller.tau_pre
+            elif self._pending:
+                rep.clock = max(t + 1e-9, min(self._pending[0][0], t_end))
+            else:
+                rep.clock = t_end
+            return
+
+        completions, tasks = rep.engine.step()
+        dt = roofline_model.extend_time(self.cfg) * rep.slowdown
+        rep.clock = t + dt
+        rep.ext_latency_ewma = 0.9 * rep.ext_latency_ewma + 0.1 * dt
+        self.scheduler.observe_extend_latency(dt)
+        self.metrics.extend_steps += 1
+        self.metrics.tasks_emitted += tasks
+        self.metrics.tasks_capacity += self.cfg.task_batch
+
+        for rid, ids, dists, extends in completions:
+            req = rep.in_flight.pop(rid)
+            req.t_completed = rep.clock
+            req.extends_used = extends
+            req.result_ids = ids
+            self.metrics.completed.append(req)
+
+    def _maybe_scale(self, t_now: float):
+        if not self.elastic:
+            return
+        depth = self.scheduler.queued()
+        cap = sum(r.engine.cfg.max_requests for r in self.replicas)
+        if depth > 2 * cap and len(self.replicas) < self.max_replicas:
+            self.add_replica()
+            self.peak_replicas = max(self.peak_replicas, len(self.replicas))
+        elif depth == 0 and len(self.replicas) > self.min_replicas:
+            idle = [i for i, r in enumerate(self.replicas)
+                    if r.engine.num_active == 0]
+            if idle:
+                self.replicas.pop(idle[-1])

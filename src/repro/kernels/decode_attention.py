@@ -1,0 +1,101 @@
+"""Flash-decode: single-token GQA attention over a long KV cache.
+
+Grid: (B, Hkv, num_kv_blocks). Each step loads one (bs, hd) KV block from
+the cache, updates online-softmax stats for the g query heads that share
+that kv head, and writes the normalised output at the last block. The
+length mask comes from ``cur_len`` via scalar prefetch. This is the
+memory-bound operator of the paper's decode roofline: bytes = S·hd·2 per
+(b, kv-head), FLOPs ≈ 2·g·S·hd ⇒ AI ≈ g/2 FLOP/byte at bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(cur_len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_s: int, sm_scale: float,
+                   g: int):
+    sj = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cur_len = cur_len_ref[0]
+    # skip blocks entirely past cur_len
+    @pl.when(sj * block_s <= cur_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (g, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        kpos = sj * block_s + jax.lax.broadcasted_iota(jnp.int32, (g, block_s), 1)
+        s = jnp.where(kpos <= cur_len, s, NEG_INF)
+        m_prev = m_scr[...][:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_scr[...][:, :1] + jnp.sum(p, axis=1, keepdims=True),
+            l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+
+    @pl.when(sj == ns - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, cur_len, *, block_s: int = 512,
+                     interpret: bool = True):
+    """q: (B,H,hd) one new token; k/v: (B,S,Hkv,hd) cache; positions
+    <= cur_len attend. Returns (B,H,hd). Oracle: ``ref.decode_attn_ref``."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, Hkv, g, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B,Hkv,S,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, Hkv, S // bs)
+    kernel = functools.partial(_decode_kernel, block_s=bs, sm_scale=sm_scale, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,  # cur_len
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, *_: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b, h, j, *_: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cur_len, jnp.int32)[None], qg, kt, vt)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,125 @@
+"""Trinity's fixed-shape global distance stage as a Pallas TPU kernel.
+
+Paper §3.2: all surviving (request, candidate) pairs from one *extend* step
+are flattened into a single fixed-shape task array and evaluated by ONE
+kernel launch; short batches are padded with masked dummies so the operator
+shape never changes (the CUDA-graph analogue on TPU is the fixed jitted
+shape → no recompiles).
+
+TPU adaptation (DESIGN.md §3): the GPU warp-gather becomes a *burst DMA
+gather* — task db-row ids arrive via scalar prefetch (SMEM), each grid step
+issues TASK_BLOCK row copies HBM→VMEM back-to-back on per-row DMA
+semaphores, then waits; distances are computed with an MXU matmul against
+the resident query block plus a one-hot slot-select (VPU). Arithmetic
+intensity per task ≈ d MACs / d·4 bytes ⇒ memory-bound, matching the
+paper's roofline placement of ANN next to decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DUMMY_DIST = 1e30
+
+
+def _distance_kernel(task_ids_sref, db_ref, queries_ref, qnorm_ref,
+                     ids_ref, slot_ref, out_ref, gather, sems, *,
+                     task_block: int, metric: str):
+    """One grid step = one task block.
+
+    task_ids_sref: (T,) int32 in SMEM (scalar prefetch, DMA addressing)
+    db_ref:        (N, d) in ANY (stays in HBM; rows DMA'd on demand)
+    queries_ref:   (R, d) VMEM — request-slot query vectors (resident)
+    qnorm_ref:     (1, R) VMEM — precomputed |q|^2 per slot
+    ids_ref:       (task_block,) VMEM — same ids, for dummy masking
+    slot_ref:      (task_block,) VMEM — owning slot per task
+    out_ref:       (task_block,) VMEM distances
+    gather:        (task_block, d) VMEM scratch
+    sems:          (task_block,) DMA semaphores
+    """
+    blk = pl.program_id(0)
+    base = blk * task_block
+
+    # ---- burst DMA gather: start all row copies, then wait all ----------
+    def start(i, carry):
+        row = jnp.maximum(task_ids_sref[base + i], 0)  # dummies fetch row 0
+        pltpu.make_async_copy(
+            db_ref.at[pl.ds(row, 1)], gather.at[pl.ds(i, 1)], sems.at[i]
+        ).start()
+        return carry
+
+    jax.lax.fori_loop(0, task_block, start, 0)
+
+    def wait(i, carry):
+        row = jnp.maximum(task_ids_sref[base + i], 0)
+        pltpu.make_async_copy(
+            db_ref.at[pl.ds(row, 1)], gather.at[pl.ds(i, 1)], sems.at[i]
+        ).wait()
+        return carry
+
+    jax.lax.fori_loop(0, task_block, wait, 0)
+
+    # ---- distances: MXU matmul + one-hot slot select (VPU) --------------
+    x = gather[...].astype(jnp.float32)  # (TB, d)
+    q = queries_ref[...].astype(jnp.float32)  # (R, d)
+    xq = jax.lax.dot_general(x, q, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (TB, R)
+
+    R = q.shape[0]
+    onehot = (slot_ref[...][:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (task_block, R), 1))
+    sel_xq = jnp.sum(jnp.where(onehot, xq, 0.0), axis=1)  # (TB,)
+
+    if metric == "l2":
+        xnorm = jnp.sum(x * x, axis=1)
+        sel_qn = jnp.sum(jnp.where(onehot, qnorm_ref[...], 0.0), axis=1)
+        dist = xnorm - 2.0 * sel_xq + sel_qn
+    elif metric == "ip":
+        dist = -sel_xq
+    else:
+        raise ValueError(metric)
+
+    out_ref[...] = jnp.where(ids_ref[...] >= 0, dist, DUMMY_DIST)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "task_block", "interpret"))
+def distance_tasks(db, queries, task_ids, task_slot, *, metric: str = "l2",
+                   task_block: int = 256, interpret: bool = True):
+    """Fixed-shape distance stage. Oracle: ``ref.distance_tasks_ref``.
+
+    db (N,d) · queries (R,d) · task_ids/task_slot (T,) int32 with
+    T % task_block == 0 (the engine pads with dummies; id −1 = dummy).
+    Returns (T,) float32 distances (dummies = DUMMY_DIST).
+    """
+    T = task_ids.shape[0]
+    assert T % task_block == 0, (T, task_block)
+    qnorm = jnp.sum(queries.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1,R)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # task_ids (SMEM, DMA addressing)
+        grid=(T // task_block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # db stays in HBM
+            pl.BlockSpec(queries.shape, lambda i, *_: (0, 0)),  # resident
+            pl.BlockSpec(qnorm.shape, lambda i, *_: (0, 0)),
+            pl.BlockSpec((task_block,), lambda i, *_: (i,)),  # ids (mask)
+            pl.BlockSpec((task_block,), lambda i, *_: (i,)),  # slots
+        ],
+        out_specs=pl.BlockSpec((task_block,), lambda i, *_: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((task_block, db.shape[1]), jnp.float32),
+            pltpu.SemaphoreType.DMA((task_block,)),
+        ],
+    )
+    kernel = functools.partial(_distance_kernel, task_block=task_block,
+                               metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        interpret=interpret,
+    )(task_ids, db.astype(jnp.float32), queries, qnorm, task_ids, task_slot)

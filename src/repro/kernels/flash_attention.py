@@ -1,0 +1,113 @@
+"""Blocked causal flash attention (prefill / train path on TPU).
+
+Grid: (B, Hq, num_q_blocks, num_kv_blocks), kv innermost. Online-softmax
+running stats live in VMEM scratch; the GQA kv head for query head h is
+selected purely through the BlockSpec index map (h // group), so kv is
+never materialised per-q-head. Block shapes are MXU-aligned (q/kv blocks
+multiples of the 128 lane width when head_dim allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, sm_scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (kj * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...][:, :1]  # (bq,1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)  # (bq,1)
+        l_new = alpha * l_scr[...][:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    if causal:
+        last = (qi * block_q + block_q - 1) // block_k
+    else:
+        last = nk - 1
+
+    @pl.when(kj == jnp.minimum(last, nk - 1))
+    def _fin():
+        l = jnp.maximum(l_scr[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd).
+
+    Oracle: ``ref.mha_ref``.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    # (B,S,H,hd) -> (B,H,S,hd) blocked layout
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, Sq // bq, Sk // bk)
+    kernel = functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                               causal=causal, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),  # m
+            pltpu.VMEM((bq, 128), jnp.float32),  # l
+            pltpu.VMEM((bq, hd), jnp.float32),  # acc
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

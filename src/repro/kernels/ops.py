@@ -1,0 +1,35 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) every kernel runs in ``interpret=True`` mode — the
+kernel body executes as pure JAX ops, validating BlockSpec tiling and
+semantics. On a TPU backend the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import distance as _dist
+from repro.kernels import flash_attention as _fa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def distance_tasks(db, queries, task_ids, task_slot, metric: str = "l2",
+                   task_block: int = 256):
+    return _dist.distance_tasks(db, queries, task_ids, task_slot,
+                                metric=metric, task_block=task_block,
+                                interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def decode_attention(q, k, v, cur_len, block_s: int = 512):
+    return _dec.decode_attention(q, k, v, cur_len, block_s=block_s,
+                                 interpret=_interpret())

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). DRYRUN_DEVICES overrides for the reduced-scale test
+# harness only — still before the jax import below.
+if os.environ.get("DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production mesh with ShapeDtypeStruct stand-ins (no
+allocation), then record memory analysis, cost analysis and the collective
+schedule for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.launch import hlo_cost
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.distributed import sharding as shard
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+# TPU v5e-class constants (assignment)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer sizes of every collective op in the (per-device)
+    compiled HLO. '-start' variants counted once ('-done' carries no type)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        total = 0
+        for sm in _SHAPE_RE.finditer(m.group("type")):
+            dt = sm.group("dt")
+            dims = [int(x) for x in sm.group("dims").split(",") if x]
+            n = 1
+            for d in dims:
+                n *= d
+            key = dt[:2] + dt[2:] if dt in _DTYPE_BYTES else dt
+            total += n * _DTYPE_BYTES.get(dt, _DTYPE_BYTES.get(key, 4))
+        out[op] = out.get(op, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def num_microbatches_for(cfg, shape, variant: str = "baseline") -> int:
+    if shape.kind != "train":
+        return 1
+    if variant == "micro1":
+        return 1
+    if variant == "micro2":
+        return 2
+    if cfg.d_model >= 7000:
+        return 16
+    if cfg.d_model >= 4000:
+        return 8
+    return 4
+
+
+def build_step(cfg, shape, mesh, variant: str = "baseline"):
+    """Returns (fn, example_args, in_shardings) for the cell.
+
+    variants (§Perf iterations):
+      baseline — GSPMD everywhere
+      seqshard — decode attention under shard_map with flash-combine over
+                 the sequence-sharded KV cache (decode shapes only)
+    """
+    specs = model_zoo.input_specs(cfg, shape)
+    repl = shard.replicated(mesh)
+
+    if shape.kind == "train":
+        params_shape = model_zoo.param_specs(cfg)
+        p_shard = shard.param_shardings(params_shape, mesh)
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        o_shard = {
+            "m": jax.tree.map(lambda _, s: s, opt_shape["m"], p_shard),
+            "v": jax.tree.map(lambda _, s: s, opt_shape["v"], p_shard),
+            "step": repl,
+        }
+        d_shard = shard.data_shardings(specs, mesh)
+        fn = make_train_step(cfg, AdamWConfig(),
+                             num_microbatches_for(cfg, shape, variant))
+        return fn, (params_shape, opt_shape, specs), (p_shard, o_shard, d_shard)
+
+    if shape.kind == "prefill":
+        params_shape = model_zoo.param_specs(cfg)
+        p_shard = shard.param_shardings(params_shape, mesh)
+        d_shard = shard.data_shardings(specs, mesh)
+
+        def fn(params, batch):
+            return model_zoo.prefill_fn(cfg, params, batch)
+
+        return fn, (params_shape, specs), (p_shard, d_shard)
+
+    # decode
+    params_shape = model_zoo.param_specs(cfg)
+    p_shard = shard.param_shardings(params_shape, mesh)
+    tok_shard = shard.data_shardings({"token": specs["token"]}, mesh)["token"]
+    c_shard = shard.cache_shardings(specs["caches"], mesh, cfg)
+    seq_axis = "model" if variant == "seqshard" else None
+
+    def fn(params, token, caches, cur_len):
+        return model_zoo.decode_fn(cfg, params, token, caches, cur_len,
+                                   seq_axis=seq_axis)
+
+    return fn, (params_shape, specs["token"], specs["caches"],
+                specs["cur_len"]), (p_shard, tok_shard, c_shard, repl)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
+             results_dir: str = RESULTS_DIR, variant: str = "baseline") -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    os.makedirs(results_dir, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = os.path.join(results_dir,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "status": "error"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        fn, args, in_sh = build_step(cfg, shape, mesh, variant=variant)
+        seq_par = 16 if variant == "seqpar" else 0
+        with mesh, shard.activation_sharding(mesh, seq_parallel=seq_par):
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        # trip-count-aware analysis of the per-device module (XLA's
+        # cost_analysis counts while bodies once — see launch/hlo_cost.py)
+        scaled = hlo_cost.analyze(compiled.as_text())
+        coll = {k: float(v) for k, v in scaled["collective_bytes"].items()}
+
+        flops_dev = float(scaled["flops"])
+        bytes_dev = float(scaled["bytes_accessed"])
+        model_fl = model_zoo.model_flops(cfg, shape)
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = bytes_dev / HBM_BW
+        coll_s = coll.get("total", 0.0) / ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": coll_s}
+        bottleneck = max(terms, key=terms.get)
+        rec.update({
+            "status": "ok",
+            "devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "per_device": {
+                "flops": flops_dev,
+                "bytes_accessed": bytes_dev,
+                "collective_bytes": coll,
+                "xla_cost_analysis_raw": {
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                },
+            },
+            "memory_analysis": {
+                "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+            "roofline": {
+                **{k: float(v) for k, v in terms.items()},
+                "bottleneck": bottleneck,
+                "model_flops_global": model_fl,
+                "hlo_flops_global": flops_dev * n_dev,
+                "useful_fraction": model_fl / max(flops_dev * n_dev, 1.0),
+            },
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+        })
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every applicable (arch × shape) cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "seqshard", "seqpar", "micro1",
+                             "micro2", "seqshard_repl"])
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shp in shapes_for(get_config(arch)):
+                cells.append((arch, shp.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_ok = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shp, mp, force=args.force,
+                           results_dir=args.results_dir,
+                           variant=args.variant)
+            tag = f"{arch} × {shp} × {'2x16x16' if mp else '16x16'}"
+            if rec["status"] == "ok":
+                n_ok += 1
+                r = rec["roofline"]
+                print(f"[OK  {rec['wall_s']:7.1f}s] {tag}: "
+                      f"compute {r['compute_s']:.3e}s  mem {r['memory_s']:.3e}s  "
+                      f"coll {r['collective_s']:.3e}s  -> {r['bottleneck']}"
+                      f"  (useful {r['useful_fraction']:.2f})", flush=True)
+            else:
+                print(f"[FAIL {rec['wall_s']:6.1f}s] {tag}: {rec['error']}",
+                      flush=True)
+    print(f"done: {n_ok} ok / {len(cells) * len(meshes)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (verified in
+tests/test_dryrun_small.py), which silently undercounts any scan-over-layers
+program by ~num_layers×. This module re-derives the three roofline inputs
+from the per-device optimized module with loop bodies scaled by their
+``known_trip_count`` backend config:
+
+  · flops            — matmul FLOPs from `dot` ops (2 · numel(out) · K),
+                       recursing into fusions/calls/whiles,
+  · bytes_accessed   — operand+result bytes of top-level (post-fusion)
+                       instructions: fusion boundaries ≈ HBM traffic,
+  · collective_bytes — result-buffer bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute.
+
+All values are per device (the module is the SPMD-partitioned per-device
+program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPCODE = re.compile(r"^((?:\([^)]*\)|\S+)\s+)?([\w\-]+)\(")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_ONE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_CALLED_LIST = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "bitcast-convert", "after-all", "iota",
+               "partition-id", "replica-id",
+               # containers: their bodies are costed; the carried tuple
+               # pass-through is not real HBM traffic
+               "while", "conditional", "call"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        out.append((m.group(1), dims))
+    return out
+
+
+class _Instr:
+    __slots__ = ("name", "opcode", "result_text", "operands", "line",
+                 "trip", "called")
+
+    def __init__(self, name, opcode, result_text, operands, line, trip, called):
+        self.name = name
+        self.opcode = opcode
+        self.result_text = result_text
+        self.operands = operands
+        self.line = line
+        self.trip = trip
+        self.called = called
+
+
+class _Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs: List[_Instr] = []
+        self.shapes: Dict[str, str] = {}  # instr/param name -> result text
+
+
+def parse_module(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = _Computation(hdr.group(1))
+            comps[cur.name] = cur
+            # parameters: "name: shape" pairs
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\)|[^,)]+))",
+                                  hdr.group(2)):
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        om = _OPCODE.search(rhs)
+        if not om:
+            continue
+        result_text = om.group(1) or ""
+        opcode = om.group(2)
+        paren = rhs[om.end() - 1:]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_text = paren[1:end]
+        operands = _OPERANDS.findall(operand_text)
+        tm = _TRIP.search(rhs)
+        trip = int(tm.group(1)) if tm else None
+        called = []
+        for cm in _CALLED_LIST.finditer(rhs):
+            called += [c.strip().lstrip("%") for c in cm.group(1).split(",")
+                       if c.strip()]
+        for cm in _CALLED_ONE.finditer(rhs):
+            if cm.group(1) not in called and not cm.group(1).startswith("{"):
+                called.append(cm.group(1))
+        cur.shapes[name] = result_text
+        cur.instrs.append(_Instr(name, opcode, result_text, operands, rhs,
+                                 trip, called))
+    return comps
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+        self._sliced_memo: Dict[str, Dict[int, float]] = {}
+        self.entry = self._find_entry(hlo)
+
+    @staticmethod
+    def _find_entry(hlo: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        return m.group(1) if m else next(iter(parse_module(hlo)))
+
+    def _dot_flops(self, comp: _Computation, ins: _Instr) -> float:
+        out = _shape_dims(ins.result_text)
+        numel_out = 1
+        for _, dims in out[:1]:
+            for d in dims:
+                numel_out *= d
+        k = 1
+        cm = _CONTRACT.search(ins.line)
+        if cm and ins.operands:
+            lhs_shape = comp.shapes.get(ins.operands[0], "")
+            lhs = _shape_dims(lhs_shape)
+            if lhs:
+                dims = lhs[0][1]
+                for ix in cm.group(1).split(","):
+                    if ix and int(ix) < len(dims):
+                        k *= dims[int(ix)]
+        return 2.0 * numel_out * k
+
+    def _sliced_params(self, comp_name: str) -> Dict[int, float]:
+        """Fusion parameters whose ONLY uses are dynamic-slice / gather /
+        dynamic-update-slice ops (slice-windowed access): parameter index
+        -> effective bytes (sum of slice-sized accesses; DUS updates count
+        read+write of the update window — XLA performs them in place)."""
+        if comp_name in self._sliced_memo:
+            return self._sliced_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        out: Dict[int, float] = {}
+        if comp is not None:
+            # parameter name -> index
+            pidx = {}
+            for ins in comp.instrs:
+                if ins.opcode == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", ins.line)
+                    if m:
+                        pidx[ins.name] = int(m.group(1))
+            use_sizes: Dict[str, list] = {p: [] for p in pidx}
+            ok: Dict[str, bool] = {p: True for p in pidx}
+            for ins in comp.instrs:
+                if ins.opcode == "parameter":
+                    continue
+                for pos, op in enumerate(ins.operands):
+                    if op not in pidx:
+                        continue
+                    if ins.opcode in ("dynamic-slice", "gather") and pos == 0:
+                        use_sizes[op].append(
+                            2 * _shapes_bytes(ins.result_text))
+                    elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                        upd = (comp.shapes.get(ins.operands[1], "")
+                               if len(ins.operands) > 1 else "")
+                        use_sizes[op].append(2 * _shapes_bytes(upd))
+                    else:
+                        ok[op] = False
+            for p, idx in pidx.items():
+                if ok[p] and use_sizes[p]:
+                    out[idx] = sum(use_sizes[p])
+        self._sliced_memo[comp_name] = out
+        return out
+
+    def _dus_root_bytes(self, comp_name: str) -> Optional[float]:
+        """If the fused computation's root is a dynamic-update-slice (in
+        place), the fusion's write traffic is the update window size."""
+        comp = self.comps.get(comp_name)
+        if comp is None or not comp.instrs:
+            return None
+        root = comp.instrs[-1]
+        if root.opcode != "dynamic-update-slice":
+            return None
+        upd = (comp.shapes.get(root.operands[1], "")
+               if len(root.operands) > 1 else "")
+        return float(_shapes_bytes(upd)) if upd else None
+
+    def cost_of(self, comp_name: str) -> Tuple[float, float, Dict[str, float]]:
+        """(flops, bytes, collective_bytes_by_op) with loop scaling.
+
+        Bytes are counted at fusion boundaries only: a `fusion` call site
+        contributes its own operands+result (the HBM round-trip), while the
+        fused computation's interior contributes FLOPs but NO bytes.
+        dynamic-slice / dynamic-update-slice contribute the slice, not the
+        whole buffer (XLA updates in place)."""
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return (0.0, 0.0, {})
+        flops = 0.0
+        bytes_ = 0.0
+        coll: Dict[str, float] = {}
+        self._memo[comp_name] = (0.0, 0.0, {})  # cycle guard
+        for ins in comp.instrs:
+            mult = float(ins.trip) if (ins.opcode == "while" and ins.trip) \
+                else 1.0
+            # recurse into called computations; fusion interiors carry no
+            # byte traffic (the boundary is accounted at this call site)
+            interior_bytes = ins.opcode not in ("fusion",)
+            for sub in ins.called:
+                f, b, c = self.cost_of(sub)
+                flops += mult * f
+                if interior_bytes:
+                    bytes_ += mult * b
+                for k, v in c.items():
+                    coll[k] = coll.get(k, 0.0) + mult * v
+            if ins.opcode == "dot":
+                flops += self._dot_flops(comp, ins)
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                sz = _shapes_bytes(ins.result_text)
+                coll[base] = coll.get(base, 0.0) + sz
+            if ins.opcode in _NO_TRAFFIC or ins.opcode.endswith("-done"):
+                continue
+            if ins.opcode == "dynamic-slice":
+                bytes_ += 2 * _shapes_bytes(ins.result_text)  # read+write slice
+                continue
+            if ins.opcode == "dynamic-update-slice":
+                # in-place: traffic = the update operand, read + write
+                upd = (comp.shapes.get(ins.operands[1], "")
+                       if len(ins.operands) > 1 else ins.result_text)
+                bytes_ += 2 * _shapes_bytes(upd)
+                continue
+            # fusion-boundary traffic: result + operands. Operands that the
+            # fused computation only *slices* (saved-residual stacks read by
+            # a fused dynamic-slice) count as the slice, not the buffer; a
+            # fusion whose root is an in-place dynamic-update-slice writes
+            # only the update window.
+            res_bytes = _shapes_bytes(ins.result_text)
+            if ins.opcode == "fusion" and ins.called:
+                sliced = self._sliced_params(ins.called[0])
+                root_dus = self._dus_root_bytes(ins.called[0])
+                if root_dus is not None:
+                    res_bytes = min(res_bytes, root_dus)
+            else:
+                sliced = {}
+            bytes_ += res_bytes
+            for pos, op in enumerate(ins.operands):
+                osh = comp.shapes.get(op, "")
+                full = _shapes_bytes(osh)
+                bytes_ += min(full, sliced[pos]) if pos in sliced else full
+        self._memo[comp_name] = (flops, bytes_, coll)
+        return self._memo[comp_name]
+
+    def totals(self) -> dict:
+        f, b, c = self.cost_of(self.entry)
+        return {"flops": f, "bytes_accessed": b,
+                "collective_bytes": {**c, "total": sum(c.values())}}
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloCost(hlo_text).totals()

@@ -1,0 +1,57 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container use ``--smoke`` (reduced config); on a TPU fleet the
+full config shards over the production mesh with the same code path. The
+driver is checkpointed and resumable (kill it mid-run and rerun the same
+command to continue — tests/test_checkpoint.py exercises the contract).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.distributed import sharding as shard
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo
+from repro.training.data import SyntheticEncDecData, SyntheticLMData
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if model_zoo.is_encdec(cfg):
+        data = SyntheticEncDecData(cfg.vocab_size, args.seq, args.batch,
+                                   cfg.d_model)
+    else:
+        data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch)
+
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+    with mesh, shard.activation_sharding(mesh):
+        trainer = Trainer(cfg, data, AdamWConfig(lr=args.lr, warmup_steps=20),
+                          num_microbatches=args.microbatches,
+                          checkpoint_dir=args.checkpoint_dir,
+                          checkpoint_every=args.checkpoint_every)
+        hist = trainer.run(args.steps)
+    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model substrate: layers, attention variants, MoE, SSM/xLSTM blocks, and
+architecture assembly (transformer.py / encdec.py / model_zoo.py)."""

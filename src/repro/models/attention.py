@@ -1,0 +1,277 @@
+"""GQA/MQA/MHA attention: blocked-causal forward, cached decode, and the
+sequence-sharded decode combine used under ``shard_map`` on the production
+mesh (DESIGN.md §5).
+
+Shapes:
+  x:      (B, S, d_model)
+  q:      (B, S, H, hd)        k/v: (B, S, Hkv, hd)
+  cache:  {"k": (B, S_max, Hkv, hd), "v": ...}   (per layer)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(keys[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": layers.dense_init(keys[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": layers.dense_init(keys[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": layers.dense_init(keys[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = constrain(q.reshape(B, S, cfg.num_heads, hd),
+                  "batch", None, "model", None)
+    k = constrain(k.reshape(B, S, cfg.num_kv_heads, hd),
+                  "batch", None, "model", None)
+    v = constrain(v.reshape(B, S, cfg.num_kv_heads, hd),
+                  "batch", None, "model", None)
+    return q, k, v
+
+
+def gqa_scores(q, k):
+    """q: (B, Sq, H, hd), k: (B, Sk, Hkv, hd) -> (B, Hkv, g, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def gqa_values(probs, v):
+    """probs: (B, Hkv, g, Sq, Sk), v: (B, Sk, Hkv, hd) -> (B, Sq, H, hd)."""
+    B, Hkv, g, Sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, Hkv * g, v.shape[-1])
+
+
+def attend_blocked(q, k, v, q_positions, kv_positions, causal: bool,
+                   block_q: int = 512, seq_parallel: int = -1):
+    """Blocked attention: scan over q blocks so (Sq, Sk) scores are never
+    materialised at once (the 32k-prefill XLA path; Pallas flash on TPU).
+
+    seq_parallel=M > 0: additionally split the query rows into M chunks on
+    a leading dim constrained to the "model" mesh axis — sequence-parallel
+    attention for archs whose head count does not divide the TP degree
+    (per-device score traffic drops ×M; K/V are small and get gathered).
+    EXPERIMENTS.md §Perf cell C.
+    """
+    B, Sq, H, hd = q.shape
+    if seq_parallel < 0:  # default: take M from the launcher context
+        from repro.distributed.sharding import ctx_seq_parallel
+
+        seq_parallel = ctx_seq_parallel()
+    if q_positions.ndim != 1:
+        seq_parallel = 0  # ragged positions: keep the simple path
+    M = seq_parallel if (seq_parallel and Sq % seq_parallel == 0) else 1
+    Sl = Sq // M  # rows per sequence shard
+    qb = min(block_q, Sl)
+    while Sl % qb:
+        qb //= 2
+    nblk = Sl // qb
+    # (B, M, nblk, qb, H, hd) — M sharded on "model" when requested
+    qr = q.reshape(B, M, nblk, qb, H, hd)
+    if M > 1:
+        from repro.distributed.sharding import constrain
+
+        qr = constrain(qr, "batch", "model", None, None, None, None)
+    qpos = q_positions.reshape(M, nblk, qb)
+
+    def body(_, blk):
+        qblk, qp = blk  # (B, M, qb, H, hd), (M, qb)
+        Hkv = k.shape[2]
+        g = H // Hkv
+        qg = qblk.reshape(B, M, qb, Hkv, g, hd)
+        scores = jnp.einsum("bmqkgh,bskh->bmkgqs", qg, k) \
+            / jnp.sqrt(hd).astype(q.dtype)
+        scores = scores.astype(jnp.float32)
+        if causal:
+            mask = qp[None, :, None, None, :, None] >= \
+                kv_positions[None, None, None, None, None, :]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bmkgqs,bskh->bmqkgh", probs, v)
+        return None, out.reshape(B, M, qb, H, v.shape[-1])
+
+    blks = (jnp.moveaxis(qr, 2, 0), jnp.moveaxis(qpos, 1, 0))
+    # flash-style backward: recompute each q-block's scores instead of
+    # letting scan stack (qb, Sk) probs per iteration (O(S²) activations)
+    _, out = jax.lax.scan(jax.checkpoint(body), None, blks)
+    hd_v = out.shape[-1]  # v head dim (differs from q's under MLA)
+    # (nblk, B, M, qb, H, hd_v) -> (B, M, nblk, qb, ...) -> (B, Sq, H, hd_v)
+    return jnp.moveaxis(out, 0, 2).reshape(B, Sq, H, hd_v)
+
+
+def attention_forward(params, x, cfg, positions=None, causal: bool = True,
+                      kv_override=None):
+    """Full-sequence attention (train / prefill / encoder).
+
+    kv_override: (k, v, kv_positions) for cross-attention.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if kv_override is None:
+        cos, sin = layers.rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        kv_positions = positions
+    else:
+        k, v, kv_positions = kv_override
+    out = attend_blocked(q, k, v, positions, kv_positions, causal)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return constrain(out, "batch", None, None), (k, v)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def decode_step_attention(params, x_step, cache, cur_len, cfg,
+                          seq_axis: Optional[str] = None):
+    """One-token decode over a KV cache.
+
+    x_step: (B, 1, d). cur_len: scalar int32 — number of tokens already in
+    the cache (the new token's global position).
+
+    seq_axis=None: plain global semantics — GSPMD distributes (and, with a
+    sequence-sharded cache, all-gathers it per layer: the measured baseline
+    of EXPERIMENTS.md §Perf). seq_axis="<mesh axis>": the cache stays
+    sharded; the core runs under shard_map with flash-style partial-softmax
+    combines (psum of (B,H,hd)+stats instead of an S-sized all-gather).
+    """
+    B = x_step.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(params, x_step, cfg)  # (B,1,H,hd)
+
+    pos = jnp.asarray(cur_len, jnp.int32)[None]
+    cos, sin = layers.rope_angles(pos, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k_new = layers.apply_rope(k_new, cos, sin)
+
+    if seq_axis is not None:
+        from repro.distributed.sharding import _CTX, batch_spec_for
+        from jax.sharding import PartitionSpec as P
+
+        mesh = _CTX["mesh"]
+        if mesh is not None:
+            # not yet inside shard_map: wrap the cache core. Batch stays
+            # sharded on (pod, data) — replicating it here was measured to
+            # all-gather the cache over "data" (§Perf cell A, iteration 1)
+            b = batch_spec_for((B,), mesh)[0]
+            cspec = {"k": P(b, seq_axis, None, None),
+                     "v": P(b, seq_axis, None, None)}
+            qspec = P(b, None, None, None)
+            out, new_cache = jax.shard_map(
+                lambda q_, kn, vn, c, cl: _cached_attention_core(
+                    q_, kn, vn, c, cl, cfg, seq_axis),
+                mesh=mesh,
+                in_specs=(qspec, qspec, qspec, cspec, P()),
+                out_specs=(P(b, None, None, None, None), cspec),
+                check_vma=False,
+            )(q, k_new, v_new, cache, jnp.asarray(cur_len, jnp.int32))
+            out = out.reshape(B, 1, cfg.num_heads * hd)
+            return out @ params["wo"], new_cache
+
+    out, cache = _cached_attention_core(q, k_new, v_new, cache,
+                                        jnp.asarray(cur_len, jnp.int32),
+                                        cfg, seq_axis)
+    out = out.reshape(B, 1, cfg.num_heads * hd)
+    return out @ params["wo"], cache
+
+
+def _cached_attention_core(q, k_new, v_new, cache, cur_len, cfg,
+                           seq_axis: Optional[str]):
+    """Cache write + masked attention over the (possibly locally-sharded)
+    cache. Returns ((B,1,Hkv,g,hd)-shaped output flattened later, cache)."""
+    B = q.shape[0]
+    S_local = cache["k"].shape[1]
+    if seq_axis is None:
+        shard0 = jnp.int32(0)
+        n_shards = 1
+    else:
+        shard0 = jax.lax.axis_index(seq_axis) * S_local
+        n_shards = jax.lax.axis_size(seq_axis)
+
+    # -- cache write: only the shard owning position cur_len writes.
+    local_ix = jnp.clip(cur_len - shard0, 0, S_local - 1)
+    owns = (cur_len >= shard0) & (cur_len < shard0 + S_local)
+
+    if seq_axis is not None:
+        # shard_map path: indices are local — slice-read → select →
+        # slice-write keeps traffic O(B·hd) per layer (§Perf cell A it.2)
+        def write(buf, new):
+            cur = jax.lax.dynamic_slice(buf, (0, local_ix, 0, 0), new.shape)
+            val = jnp.where(owns, new.astype(buf.dtype), cur)
+            return jax.lax.dynamic_update_slice(buf, val,
+                                                (0, local_ix, 0, 0))
+    else:
+        # GSPMD path: a dynamic-slice across the sharded S dim lowers to
+        # collectives (measured §Perf cell A it.2) — keep DUS + select
+        def write(buf, new):
+            upd = jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, local_ix, 0, 0))
+            return jnp.where(owns, upd, buf)
+
+    cache = {"k": write(cache["k"], k_new), "v": write(cache["v"], v_new)}
+
+    # -- local partial attention (cache stays in storage dtype; f32 only
+    # as the einsum accumulator — see §Perf cell A, iteration 3)
+    kv_pos = shard0 + jnp.arange(S_local, dtype=jnp.int32)
+    valid = kv_pos <= cur_len  # includes the just-written token
+    B_, _, H_, hd_ = q.shape
+    Hkv_ = cache["k"].shape[2]
+    qg = q.reshape(B_, 1, Hkv_, H_ // Hkv_, hd_)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache["k"],
+                        preferred_element_type=jnp.float32) \
+        / jnp.sqrt(hd_).astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    m_loc = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m_loc)
+    p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+    l_loc = jnp.sum(p, axis=-1, keepdims=True)
+    o_loc = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(cache["v"].dtype),
+                       cache["v"], preferred_element_type=jnp.float32)
+
+    if n_shards == 1:
+        out = o_loc / jnp.maximum(l_loc, 1e-30)
+    else:
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        alpha = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(alpha * l_loc, seq_axis)
+        o_glob = jax.lax.psum(alpha * o_loc, seq_axis)  # (…,1,1)*(…,1,hd)
+        out = o_glob / jnp.maximum(l_glob, 1e-30)
+
+    out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4)  # (B,1,Hkv,g,hd)
+    return out, cache

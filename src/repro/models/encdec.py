@@ -1,0 +1,184 @@
+"""Encoder–decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) supplied by
+``input_specs()``. Decoder = causal self-attention (cached at decode) +
+cross-attention over the encoder output + gated MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.models.transformer import lm_head_vocab
+
+NEG_INF = attention.NEG_INF
+
+
+def init_encdec_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = lm_head_vocab(cfg)
+    n_enc = cfg.encoder_layers
+    n_dec = cfg.num_layers - n_enc
+    k_emb, k_enc, k_dec, k_head = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": layers.init_rms_norm(cfg.d_model, dtype),
+            "ln2": layers.init_rms_norm(cfg.d_model, dtype),
+            "attn": attention.init_attention(k1, cfg, dtype),
+            "mlp": layers.init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": layers.init_rms_norm(cfg.d_model, dtype),
+            "lnx": layers.init_rms_norm(cfg.d_model, dtype),
+            "ln2": layers.init_rms_norm(cfg.d_model, dtype),
+            "self_attn": attention.init_attention(k1, cfg, dtype),
+            "cross_attn": attention.init_attention(k2, cfg, dtype),
+            "mlp": layers.init_gated_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    return {
+        "embed": layers.embed_init(k_emb, vp, cfg.d_model, dtype),
+        "encoder": jax.vmap(enc_layer)(jax.random.split(k_enc, n_enc)),
+        "decoder": jax.vmap(dec_layer)(jax.random.split(k_dec, n_dec)),
+        "final_norm": layers.init_rms_norm(cfg.d_model, dtype),
+        "lm_head": layers.dense_init(k_head, cfg.d_model, vp, dtype),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, d) stub frontend embeddings -> encoder output."""
+    S = frames.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, p):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attention.attention_forward(p["attn"], h, cfg, positions,
+                                           causal=False)
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.gated_mlp(p["mlp"], h, cfg.mlp_kind), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames, params["encoder"])
+    return x
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["cross_attn"]["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["cross_attn"]["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def decoder_hidden(params, cfg, tokens, enc_out):
+    """Teacher-forced decoder pass returning pre-norm hidden states."""
+    x, _ = _decoder_scan(params, cfg, tokens, enc_out)
+    return x
+
+
+def decoder_forward(params, cfg, tokens, enc_out):
+    """Teacher-forced decoder pass. Returns (logits, caches)."""
+    x, caches = _decoder_scan(params, cfg, tokens, enc_out)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.mask_padded_logits(
+        (x @ params["lm_head"]).astype(jnp.float32), cfg.vocab_size)
+    return logits, caches
+
+
+def _decoder_scan(params, cfg, tokens, enc_out):
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+    x = params["embed"][tokens]
+
+    def body(x, p):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, (k, v) = attention.attention_forward(p["self_attn"], h, cfg, positions)
+        x = x + a
+        h = layers.rms_norm(x, p["lnx"], cfg.norm_eps)
+        ck, cv = _cross_kv(p, enc_out, cfg)
+        a, _ = attention.attention_forward(
+            p["cross_attn"], h, cfg, positions, causal=False,
+            kv_override=(ck, cv, enc_pos))
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.gated_mlp(p["mlp"], h, cfg.mlp_kind)
+        return x, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+    x, caches = jax.lax.scan(jax.checkpoint(body), x, params["decoder"])
+    return x, caches
+
+
+def encdec_loss(params, cfg, batch):
+    """batch: {"frames": (B,S,d), "tokens": (B,S), "labels": (B,S)}."""
+    from repro.models.transformer import chunked_xent
+
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden = decoder_hidden(params, cfg, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    s_nll, s_m = chunked_xent(params, cfg, hidden, labels, mask)
+    loss = s_nll / jnp.maximum(s_m, 1.0)
+    return loss, {"loss": loss, "xent": loss, "aux": jnp.float32(0.0)}
+
+
+def init_encdec_caches(cfg, batch: int, max_len: int, enc_len: int, dtype):
+    n_dec = cfg.num_layers - cfg.encoder_layers
+    hd = cfg.resolved_head_dim
+
+    def one(_):
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "ck": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+            "cv": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+        }
+
+    return jax.vmap(one)(jnp.arange(n_dec))
+
+
+def encdec_prefill(params, cfg, frames, tokens):
+    """Encoder pass + teacher-forced decoder prefill -> (logits_last, caches)."""
+    enc_out = encode(params, cfg, frames)
+    logits, caches = decoder_forward(params, cfg, tokens, enc_out)
+    return logits[:, -1:, :], caches
+
+
+def encdec_decode_step(params, cfg, token, caches, cur_len, seq_axis=None):
+    """One decoder token with cached self-KV and encoder cross-KV."""
+    x = params["embed"][token]
+
+    def body(x, xs):
+        p, c = xs
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        self_cache = {"k": c["k"], "v": c["v"]}
+        a, self_cache = attention.decode_step_attention(
+            p["self_attn"], h, self_cache, cur_len, cfg, seq_axis)
+        x = x + a
+        # cross attention over the static encoder kv
+        h = layers.rms_norm(x, p["lnx"], cfg.norm_eps)
+        B = h.shape[0]
+        hd = cfg.resolved_head_dim
+        q = (h @ p["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, hd)
+        scores = attention.gqa_scores(q, c["ck"]).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c["cv"].dtype)
+        a = attention.gqa_values(probs, c["cv"]).reshape(B, 1, -1)
+        x = x + a @ p["cross_attn"]["wo"]
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.gated_mlp(p["mlp"], h, cfg.mlp_kind)
+        return x, {"k": self_cache["k"], "v": self_cache["v"],
+                   "ck": c["ck"], "cv": c["cv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.mask_padded_logits(
+        (x @ params["lm_head"]).astype(jnp.float32), cfg.vocab_size)
+    return logits, new_caches

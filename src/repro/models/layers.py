@@ -1,0 +1,119 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embedding tables.
+
+Raw-JAX style: parameters are nested dict pytrees created by ``init_*``
+functions; forward passes are pure functions. All dense kernels are stored
+as (d_in, d_out) so the sharding rules in ``repro.distributed.sharding``
+can map d_in -> "data" (FSDP) and d_out -> "model" (TP).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype):
+    # stored as delta from 1.0 (gemma-style); works for all archs
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int32[...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim//2].
+
+    Rotates pairs (x[..., :half], x[..., half:]) — the "split-half"
+    convention used by llama/gemma/qwen/phi3 HF implementations.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def gated_mlp(params, x, kind: str = "swiglu"):
+    from repro.distributed.sharding import constrain
+
+    spec = ["batch"] + [None] * (x.ndim - 2) + ["model"]
+    gate = constrain(x @ params["wi_gate"], *spec)
+    up = constrain(x @ params["wi_up"], *spec)
+    if kind == "swiglu":
+        act = jax.nn.silu(gate)
+    elif kind == "geglu":
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(kind)
+    out = (act * up) @ params["wo"]
+    return constrain(out, "batch", *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# logits head with vocab padding (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(vocab_size: int, multiple: int = 2048) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def mask_padded_logits(logits, true_vocab: int):
+    v = logits.shape[-1]
+    if v == true_vocab:
+        return logits
+    mask = jnp.arange(v) < true_vocab
+    return jnp.where(mask, logits, jnp.finfo(logits.dtype).min)

@@ -1,0 +1,136 @@
+"""Mamba-1 selective SSM block: chunked parallel scan for train/prefill,
+O(1)-state recurrent update for decode (the sub-quadratic path that makes
+jamba eligible for the long_500k shape).
+
+Chunking: the recurrence h_t = a_t ⊙ h_{t-1} + b_t is computed with
+``lax.associative_scan`` *within* fixed-size chunks and a sequential
+``lax.scan`` carry *across* chunks, so peak memory is one chunk of
+(B, Lc, d_inner, d_state) instead of the full sequence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def dt_rank_for(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dtr = dt_rank_for(d)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": layers.dense_init(ks[3], dtr, di, dtype, scale=dtr**-0.5),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1), dtype),  # softplus^-1(1)
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_inputs(params, xin, cfg):
+    """xin: (B, S, di) post-conv activations -> (a, b, C) scan elements."""
+    ds = cfg.mamba_d_state
+    dtr = dt_rank_for(cfg.d_model)
+    proj = xin @ params["x_proj"]
+    dt, B_ssm, C_ssm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])  # (di, ds)
+    a = jnp.exp(dt[..., None] * A)  # (B,S,di,ds)
+    b = (dt * xin.astype(jnp.float32))[..., None] * B_ssm.astype(jnp.float32)[..., None, :]
+    return a, b, C_ssm.astype(jnp.float32)
+
+
+def _causal_conv(params, x, cfg, conv_state=None):
+    """Depthwise causal conv over S. x: (B,S,di). conv_state: (B,dc-1,di)."""
+    dc = cfg.mamba_d_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+dc-1, di)
+    out = sum(xp[:, j:j + x.shape[1], :] * params["conv_w"][j] for j in range(dc))
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else pad
+    return jax.nn.silu(out + params["conv_b"]), new_state
+
+
+def _chunked_linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t*h_{t-1} + b_t over axis 1. a,b: (B,S,di,ds). h0: (B,di,ds)."""
+    B, S, di, ds = a.shape
+    Lc = min(chunk, S)
+    while S % Lc:
+        Lc //= 2
+    n = S // Lc
+    a_c = a.reshape(B, n, Lc, di, ds)
+    b_c = b.reshape(B, n, Lc, di, ds)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h, ab):
+        a_k, b_k = ab  # (B,Lc,di,ds)
+        A_cum, b_acc = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+        h_all = A_cum * h[:, None] + b_acc  # (B,Lc,di,ds)
+        return h_all[:, -1], h_all
+
+    # recompute chunk interiors in backward (associative_scan residuals
+    # would otherwise stack to the full sequence)
+    h_end, h_chunks = jax.lax.scan(
+        jax.checkpoint(chunk_body), h0,
+        (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    h_seq = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, di, ds)
+    return h_seq, h_end
+
+
+def mamba_forward(params, x, cfg, chunk: int = 256):
+    """x: (B,S,d) -> (B,S,d). Train/prefill path."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, _ = _causal_conv(params, xin, cfg)
+    a, b, C_ssm = _ssm_inputs(params, xin, cfg)
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    h_seq, _ = _chunked_linear_scan(a, b, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, C_ssm)
+    y = y + params["D"] * xin.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode_step(params, x_step, cache, cfg):
+    """x_step: (B,1,d). O(1) recurrent update."""
+    xz = x_step @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv(params, xin, cfg, conv_state=cache["conv"])
+    a, b, C_ssm = _ssm_inputs(params, xin, cfg)  # S=1
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm[:, 0])[:, None, :]
+    y = y + params["D"] * xin.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_step.dtype)
+    return y @ params["out_proj"], {"h": h, "conv": conv_state}

@@ -1,0 +1,199 @@
+"""DeepSeek-style Multi-head Latent Attention (MLA).
+
+Train/prefill use the *naive* expansion (k_nope/v decompressed from the
+latent) — compute-bound, MXU-friendly. Decode uses the *absorbed* form:
+W_uk is folded into the query and W_uv into the output so the per-token
+cache is just (kv_lora_rank + rope_dim) floats — the memory-bound read the
+paper's roofline assigns to decode.
+
+Cache (per layer): {"ckv": (B, S, r), "kr": (B, S, rope_dim)}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import NEG_INF, attend_blocked
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": layers.dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": layers.init_rms_norm(m.q_lora_rank, dtype),
+        "w_uq": layers.dense_init(ks[1], m.q_lora_rank, H * qk_dim, dtype),
+        "w_dkv": layers.dense_init(ks[2], cfg.d_model, m.kv_lora_rank, dtype),
+        "kv_norm": layers.init_rms_norm(m.kv_lora_rank, dtype),
+        "w_kr": layers.dense_init(ks[3], cfg.d_model, m.qk_rope_head_dim, dtype),
+        "w_uk": layers.dense_init(ks[4], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+        "w_uv": layers.dense_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": layers.dense_init(ks[6], H * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _queries(params, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = layers.rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = (cq @ params["w_uq"]).reshape(B, S, H, qk)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    cos, sin = layers.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(params, x, cfg, positions=None):
+    """Naive (decompressed) MLA for train / prefill. Returns (out, cache_kv)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+
+    ckv = layers.rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    kr = (x @ params["w_kr"]).reshape(B, S, 1, m.qk_rope_head_dim)
+    cos, sin = layers.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    kr = layers.apply_rope(kr, cos, sin)
+
+    k_nope = (ckv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr, (B, S, H, m.qk_rope_head_dim))],
+                        axis=-1)
+    out = attend_blocked(q, k, v, positions, positions, causal=True)
+    out = out.reshape(B, S, H * m.v_head_dim) @ params["wo"]
+    return out, {"ckv": ckv, "kr": kr[:, :, 0, :]}
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode_step(params, x_step, cache, cur_len, cfg,
+                    seq_axis: Optional[str] = None):
+    """Absorbed-matrix MLA decode over the compressed cache."""
+    m = cfg.mla
+    B = x_step.shape[0]
+    H = cfg.num_heads
+    pos = jnp.asarray(cur_len, jnp.int32)[None]
+    q_nope, q_rope = _queries(params, x_step, cfg, pos)  # (B,1,H,·)
+
+    # absorb W_uk into q:  q_abs[b,h,r] = sum_n q_nope[b,h,n] * w_uk[r,h,n]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # (B,1,H,r)
+
+    ckv_new = layers.rms_norm(x_step @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    kr_new = (x_step @ params["w_kr"]).reshape(B, 1, 1, m.qk_rope_head_dim)
+    cos, sin = layers.rope_angles(pos, m.qk_rope_head_dim, cfg.rope_theta)
+    kr_new = layers.apply_rope(kr_new, cos, sin)[:, :, 0, :]
+
+    if seq_axis is not None:
+        from repro.distributed.sharding import _CTX, batch_spec_for
+        from jax.sharding import PartitionSpec as P
+
+        mesh = _CTX["mesh"]
+        if mesh is not None:
+            b = batch_spec_for((B,), mesh)[0]  # keep batch sharded (§Perf A1)
+            cspec = {"ckv": P(b, seq_axis, None),
+                     "kr": P(b, seq_axis, None)}
+            q4 = P(b, None, None, None)
+            c3 = P(b, None, None)
+            out_c, cache = jax.shard_map(
+                lambda qa, qr, cn, kn, c, cl: _cached_mla_core(
+                    qa, qr, cn, kn, c, cl, cfg, seq_axis),
+                mesh=mesh,
+                in_specs=(q4, q4, c3, c3, cspec, P()),
+                out_specs=(q4, cspec),
+                check_vma=False,
+            )(q_abs, q_rope, ckv_new, kr_new, cache,
+              jnp.asarray(cur_len, jnp.int32))
+            return _mla_output(params, out_c, x_step, cfg), cache
+
+    out_c, cache = _cached_mla_core(q_abs, q_rope, ckv_new, kr_new, cache,
+                                    jnp.asarray(cur_len, jnp.int32), cfg,
+                                    seq_axis)
+    return _mla_output(params, out_c, x_step, cfg), cache
+
+
+def _mla_output(params, out_c, x_step, cfg):
+    m = cfg.mla
+    B = x_step.shape[0]
+    H = cfg.num_heads
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bthr,rhv->bthv", out_c, w_uv).astype(x_step.dtype)
+    return out.reshape(B, 1, H * m.v_head_dim) @ params["wo"]
+
+
+def _cached_mla_core(q_abs, q_rope, ckv_new, kr_new, cache, cur_len, cfg,
+                     seq_axis):
+    """Cache write + absorbed attention over the (locally-sharded) latent
+    cache. Returns (attn-weighted ckv (B,1,H,r) in f32, cache)."""
+    m = cfg.mla
+    S_local = cache["ckv"].shape[1]
+    if seq_axis is None:
+        shard0 = jnp.int32(0)
+        n_shards = 1
+    else:
+        shard0 = jax.lax.axis_index(seq_axis) * S_local
+        n_shards = jax.lax.axis_size(seq_axis)
+
+    local_ix = jnp.clip(cur_len - shard0, 0, S_local - 1)
+    owns = (cur_len >= shard0) & (cur_len < shard0 + S_local)
+
+    if seq_axis is not None:
+        # shard_map path: local indices — O(B·r) slice write (§Perf A it.2)
+        def write(buf, new):
+            cur = jax.lax.dynamic_slice(buf, (0, local_ix, 0), new.shape)
+            val = jnp.where(owns, new.astype(buf.dtype), cur)
+            return jax.lax.dynamic_update_slice(buf, val, (0, local_ix, 0))
+    else:
+        def write(buf, new):
+            upd = jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, local_ix, 0))
+            return jnp.where(owns, upd, buf)
+
+    cache = {"ckv": write(cache["ckv"], ckv_new),
+             "kr": write(cache["kr"], kr_new)}
+
+    kv_pos = shard0 + jnp.arange(S_local, dtype=jnp.int32)
+    valid = kv_pos <= cur_len
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim).astype(jnp.float32)
+    # keep the cache in its storage dtype and accumulate in f32 — an
+    # .astype(f32) here makes XLA materialise an f32 copy of the whole
+    # stacked cache every step (§Perf cell A, iteration 3)
+    scores = (jnp.einsum("bthr,bsr->bths", q_abs, cache["ckv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bthp,bsp->bths", q_rope, cache["kr"],
+                           preferred_element_type=jnp.float32)) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+
+    m_loc = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m_loc)
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l_loc = jnp.sum(p, axis=-1, keepdims=True)
+    o_loc = jnp.einsum("bths,bsr->bthr", p.astype(cache["ckv"].dtype),
+                       cache["ckv"], preferred_element_type=jnp.float32)
+
+    if n_shards == 1:
+        out_c = o_loc / jnp.maximum(l_loc, 1e-30)
+    else:
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        alpha = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(alpha * l_loc, seq_axis)
+        o_glob = jax.lax.psum(alpha * o_loc, seq_axis)
+        out_c = o_glob / jnp.maximum(l_glob, 1e-30)
+    return out_c, cache

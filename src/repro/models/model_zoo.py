@@ -1,0 +1,196 @@
+"""Architecture dispatch: init / loss / prefill / decode per family, analytic
+parameter counts, and ``input_specs`` (ShapeDtypeStruct stand-ins — the
+dry-run never allocates real arrays).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, layers, mamba, transformer, xlstm
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.block_kind == "encdec"
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    if is_encdec(cfg):
+        return encdec.init_encdec_params(cfg, key)
+    return transformer.init_lm_params(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.encdec_loss(params, cfg, batch)
+    return transformer.lm_loss(params, cfg, batch)
+
+
+def prefill_fn(cfg: ModelConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.encdec_prefill(params, cfg, batch["frames"], batch["tokens"])
+    return transformer.prefill(params, cfg, batch["tokens"], batch.get("frontend"))
+
+
+def decode_fn(cfg: ModelConfig, params, token, caches, cur_len, seq_axis=None):
+    if is_encdec(cfg):
+        return encdec.encdec_decode_step(params, cfg, token, caches, cur_len,
+                                         seq_axis)
+    return transformer.decode_step(params, cfg, token, caches, cur_len, seq_axis)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    if is_encdec(cfg):
+        return encdec.init_encdec_caches(cfg, batch, max_len, max_len, dtype)
+    return transformer.init_decode_caches(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct; weak-type-correct, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if is_encdec(cfg):
+            return {"frames": sds((B, S, cfg.d_model), f),
+                    "tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.frontend_tokens > 0:
+            batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.d_model), f)
+        return batch
+
+    if shape.kind == "prefill":
+        if is_encdec(cfg):
+            return {"frames": sds((B, S, cfg.d_model), f),
+                    "tokens": sds((B, S), i32)}
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.frontend_tokens > 0:
+            batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.d_model), f)
+        return batch
+
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: init_decode_caches(cfg, B, S))
+        return {"token": sds((B, 1), i32),
+                "caches": caches,
+                "cur_len": sds((), i32)}
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ModelConfig):
+    """Shape/dtype pytree of the parameters without allocating them."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (roofline MODEL_FLOPS = 6·N·D uses these)
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(cfg) -> int:
+    hd = cfg.resolved_head_dim
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return (cfg.d_model * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk
+                + cfg.d_model * m.kv_lora_rank + cfg.d_model * m.qk_rope_head_dim
+                + m.kv_lora_rank * cfg.num_heads * m.qk_nope_head_dim
+                + m.kv_lora_rank * cfg.num_heads * m.v_head_dim
+                + cfg.num_heads * m.v_head_dim * cfg.d_model)
+    return (cfg.d_model * cfg.num_heads * hd
+            + 2 * cfg.d_model * cfg.num_kv_heads * hd
+            + cfg.num_heads * hd * cfg.d_model)
+
+
+def _moe_params(cfg, active_only: bool) -> int:
+    m = cfg.moe
+    e = m.top_k if active_only else m.num_experts
+    p = cfg.d_model * m.num_experts  # router (always evaluated)
+    p += e * 3 * cfg.d_model * m.expert_ffn
+    if m.num_shared_experts:
+        p += 3 * cfg.d_model * m.shared_ffn_dim * m.num_shared_experts
+    return p
+
+
+def _mamba_params(cfg) -> int:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dtr = mamba.dt_rank_for(d)
+    return (d * 2 * di + cfg.mamba_d_conv * di + di * (dtr + 2 * ds)
+            + dtr * di + di * ds + di + di * d)
+
+
+def _mlstm_params(cfg) -> int:
+    d = cfg.d_model
+    di = 2 * d
+    return d * 2 * di + 4 * di + 3 * di * di + di * 2 * cfg.num_heads + di * d
+
+
+def _slstm_params(cfg) -> int:
+    d = cfg.d_model
+    return d * 4 * d + 4 * d * (d // cfg.num_heads) + d * (4 * d) // 3 * 2
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    vp = transformer.lm_head_vocab(cfg)
+    total = vp * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * vp  # head
+
+    if cfg.block_kind == "xlstm":
+        per_group = sum(_mlstm_params(cfg) if k == "mlstm" else _slstm_params(cfg)
+                        for k in cfg.xlstm_pattern)
+        return total + per_group * (cfg.num_layers // len(cfg.xlstm_pattern))
+
+    if cfg.block_kind == "encdec":
+        n_dec = cfg.num_layers - cfg.encoder_layers
+        enc = cfg.encoder_layers * (_attn_params(cfg) + 3 * cfg.d_model * cfg.d_ff)
+        dec = n_dec * (2 * _attn_params(cfg) + 3 * cfg.d_model * cfg.d_ff)
+        return total + enc + dec
+
+    # attn / mamba_attn stacks
+    g = transformer.group_size(cfg)
+    kinds = transformer.group_layer_kinds(cfg)
+    per_group = 0
+    for i, kind in enumerate(kinds):
+        mixer = _attn_params(cfg) if kind == "attn" else _mamba_params(cfg)
+        if cfg.mlp_kind == "moe" and (i % cfg.moe_every == 0):
+            ffn = _moe_params(cfg, active_only)
+        elif cfg.mlp_kind == "none":
+            ffn = 0
+        else:
+            ffn = 3 * cfg.d_model * cfg.d_ff
+        per_group += mixer + ffn
+    total += per_group * (cfg.num_layers // g)
+    if cfg.mtp_depth > 0:
+        total += 2 * cfg.d_model * cfg.d_model + _attn_params(cfg)
+        total += _moe_params(cfg, active_only) if cfg.mlp_kind == "moe" \
+            else 3 * cfg.d_model * cfg.d_ff
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N·D (train) or 2·N·D (fwd-only), N = active params
+    excluding the embedding table, D = processed tokens."""
+    vp = transformer.lm_head_vocab(cfg)
+    n = analytic_param_count(cfg, active_only=True) - vp * cfg.d_model
+    d_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * d_tokens

@@ -1,0 +1,106 @@
+"""Fine-grained MoE (shared + routed top-k) with sort-based capacity dispatch.
+
+Dispatch is the production pattern (MaxText-style): flatten (token, choice)
+pairs, argsort by expert id, keep the first `capacity` entries per expert,
+scatter token ids into a dense (E, C) buffer, gather activations, run all
+experts batched with einsum over a leading expert axis (sharded on "model"
+= expert parallelism), and combine with a weighted scatter-add. All gathers
+and scatters are memory ops, so compiled FLOPs track *active* parameters —
+the quantity MODEL_FLOPS/HLO_FLOPs in §Roofline checks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    E = m.num_experts
+    k_router, k_gate, k_up, k_down, k_shared = jax.random.split(key, 5)
+    d = cfg.d_model
+    f = m.expert_ffn
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": layers.dense_init(k_router, d, E, jnp.float32),
+        "w_gate": (jax.random.normal(k_gate, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(k_up, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(k_down, (E, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if m.num_shared_experts > 0:
+        p["shared"] = layers.init_gated_mlp(
+            k_shared, d, m.shared_ffn_dim * m.num_shared_experts, dtype)
+    return p
+
+
+def capacity_for(num_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(math.ceil(num_tokens * m.top_k / m.num_experts * m.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def route_topk(router_logits, top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routing with softmax-normalised gates over the selected experts."""
+    gates, idx = jax.lax.top_k(router_logits, top_k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, idx
+
+
+def moe_forward(params, x, cfg, capacity: int = 0):
+    """x: (T, d) flat tokens. Returns (out, aux_loss)."""
+    m = cfg.moe
+    T, d = x.shape
+    E = m.num_experts
+    k = m.top_k
+    C = capacity or capacity_for(T, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router"])  # (T, E)
+    gates, expert_idx = route_topk(logits, k)  # (T, k)
+
+    # -- load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    occupancy = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    f_e = occupancy / (T * k)
+    p_e = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(f_e * p_e)
+
+    # -- sort-based capacity dispatch
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sgate = flat_e[order], flat_tok[order], flat_gate[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))  # (E,)
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos_in_e < C
+    dest = jnp.where(keep, se.astype(jnp.int32) * C + pos_in_e, E * C)  # OOB drop
+
+    # slot -> source token (fill = T, an all-zero pad row)
+    slot_tok = jnp.full((E * C,), T, jnp.int32).at[dest].set(stok, mode="drop")
+    slot_gate = jnp.zeros((E * C,), jnp.float32).at[dest].set(sgate, mode="drop")
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = constrain(x_pad[slot_tok].reshape(E, C, d), "model", None, None)
+
+    # -- batched expert FFN (E sharded on "model" => expert parallelism)
+    h_gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h_gate) * h_up, params["w_down"])
+    y = constrain(y, "model", None, None)
+
+    # -- weighted combine back to tokens
+    y = (y.reshape(E * C, d).astype(jnp.float32)
+         * slot_gate[:, None])
+    out = jnp.zeros((T + 1, d), jnp.float32).at[slot_tok].add(y)[:T]
+    out = constrain(out, "batch", None)
+
+    if m.num_shared_experts > 0:
+        out = out + layers.gated_mlp(params["shared"], x, "swiglu").astype(jnp.float32)
+    return out.astype(x.dtype), aux_loss

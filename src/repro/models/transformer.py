@@ -1,0 +1,565 @@
+"""Decoder-only LM assembly for all non-encdec architectures.
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` (uniform
+stacks) or by a scan over repeating *groups* (jamba's 1:7 mamba/attention
+interleave, xLSTM's block pattern) with the group unrolled inside — one
+compiled block body regardless of depth, which keeps both HLO size and
+compile time flat in ``num_layers``.
+
+API:
+  init_lm_params(cfg, key)                         -> params pytree
+  forward_train(params, cfg, tokens, frontend=None)-> (logits, aux_loss)
+  lm_loss(params, cfg, batch)                      -> (loss, metrics)
+  prefill(params, cfg, tokens, frontend=None)      -> (logits_last, caches)
+  init_decode_caches(cfg, batch, max_len, dtype)   -> caches pytree
+  decode_step(params, cfg, token, caches, cur_len) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, mamba, mla, moe, xlstm
+
+# ---------------------------------------------------------------------------
+# layer-kind plumbing
+# ---------------------------------------------------------------------------
+
+
+def _uses_moe(cfg, layer_idx_in_group: int) -> bool:
+    return cfg.mlp_kind == "moe" and (layer_idx_in_group % cfg.moe_every == 0)
+
+
+def group_size(cfg) -> int:
+    if cfg.block_kind == "mamba_attn":
+        return cfg.attn_every
+    if cfg.block_kind == "xlstm":
+        return len(cfg.xlstm_pattern)
+    return 1
+
+
+def num_groups(cfg) -> int:
+    g = group_size(cfg)
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    return cfg.num_layers // g
+
+
+def lm_head_vocab(cfg) -> int:
+    v = cfg.vocab_size
+    return v if v % 2048 == 0 else layers.padded_vocab(v)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_layer(key, cfg, dtype, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": layers.init_rms_norm(cfg.d_model, dtype),
+         "ln2": layers.init_rms_norm(cfg.d_model, dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = attention.init_attention(k1, cfg, dtype)
+    if use_moe:
+        p["mlp"] = moe.init_moe(k2, cfg, dtype)
+    elif cfg.mlp_kind != "none":
+        p["mlp"] = layers.init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg, dtype, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": layers.init_rms_norm(cfg.d_model, dtype),
+         "ln2": layers.init_rms_norm(cfg.d_model, dtype),
+         "mamba": mamba.init_mamba(k1, cfg, dtype)}
+    if use_moe:
+        p["mlp"] = moe.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = layers.init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _mlp_apply(p, x, cfg, use_moe: bool):
+    """x: (B,S,d) -> (out, aux)."""
+    if cfg.mlp_kind == "none":
+        return jnp.zeros_like(x), jnp.float32(0.0)
+    if use_moe:
+        B, S, d = x.shape
+        y, aux = moe.moe_forward(p["mlp"], x.reshape(B * S, d), cfg)
+        return y.reshape(B, S, d), aux
+    # non-MoE layers of a moe_every>1 arch (jamba) use a dense swiglu
+    kind = cfg.mlp_kind if cfg.mlp_kind != "moe" else "swiglu"
+    return layers.gated_mlp(p["mlp"], x, kind), jnp.float32(0.0)
+
+
+def _attn_layer_train(p, x, cfg, positions, use_moe: bool):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, _ = mla.mla_forward(p["attn"], h, cfg, positions)
+    else:
+        a, _ = attention.attention_forward(p["attn"], h, cfg, positions)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _mlp_apply(p, h, cfg, use_moe)
+    return x + y, aux
+
+
+def _mamba_layer_train(p, x, cfg, use_moe: bool):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + mamba.mamba_forward(p["mamba"], h, cfg)
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _mlp_apply(p, h, cfg, use_moe)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# group init / train-forward  (a "group" is the repeating unit we scan over)
+# ---------------------------------------------------------------------------
+
+
+def init_group(key, cfg, dtype):
+    bk = cfg.block_kind
+    if bk == "attn":
+        return {"l0": _init_attn_layer(key, cfg, dtype, _uses_moe(cfg, 0))}
+    if bk == "mamba_attn":
+        g = cfg.attn_every
+        attn_pos = g // 2
+        ks = jax.random.split(key, g)
+        out = {}
+        for i in range(g):
+            use_moe = _uses_moe(cfg, i)
+            if i == attn_pos:
+                out[f"l{i}"] = _init_attn_layer(ks[i], cfg, dtype, use_moe)
+            else:
+                out[f"l{i}"] = _init_mamba_layer(ks[i], cfg, dtype, use_moe)
+        return out
+    if bk == "xlstm":
+        ks = jax.random.split(key, len(cfg.xlstm_pattern))
+        out = {}
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            init = xlstm.init_mlstm if kind == "mlstm" else xlstm.init_slstm
+            out[f"l{i}"] = init(ks[i], cfg, dtype)
+        return out
+    raise ValueError(bk)
+
+
+def group_train(p_group, x, cfg, positions):
+    """Run one group of layers. Returns (x, aux_loss)."""
+    bk = cfg.block_kind
+    aux = jnp.float32(0.0)
+    if bk == "attn":
+        return _attn_layer_train(p_group["l0"], x, cfg, positions, _uses_moe(cfg, 0))
+    if bk == "mamba_attn":
+        g = cfg.attn_every
+        attn_pos = g // 2
+        for i in range(g):
+            use_moe = _uses_moe(cfg, i)
+            if i == attn_pos:
+                x, a = _attn_layer_train(p_group[f"l{i}"], x, cfg, positions, use_moe)
+            else:
+                x, a = _mamba_layer_train(p_group[f"l{i}"], x, cfg, use_moe)
+            aux = aux + a
+        return x, aux
+    if bk == "xlstm":
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            fwd = xlstm.mlstm_forward if kind == "mlstm" else xlstm.slstm_forward
+            x = fwd(p_group[f"l{i}"], x, cfg)
+        return x, aux
+    raise ValueError(bk)
+
+
+# ---------------------------------------------------------------------------
+# model-level init
+# ---------------------------------------------------------------------------
+
+
+def init_lm_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = lm_head_vocab(cfg)
+    k_emb, k_blocks, k_head, k_mtp = jax.random.split(key, 4)
+    n = num_groups(cfg)
+    blocks = jax.vmap(lambda k: init_group(k, cfg, dtype))(jax.random.split(k_blocks, n))
+    params = {
+        "embed": layers.embed_init(k_emb, vp, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": layers.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(k_head, cfg.d_model, vp, dtype)
+    if cfg.mtp_depth > 0:
+        k1, k2 = jax.random.split(k_mtp)
+        params["mtp"] = {
+            "proj": layers.dense_init(k1, 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": _init_attn_layer(k2, cfg, dtype, _uses_moe(cfg, 0)),
+            "norm": layers.init_rms_norm(cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg, tokens, frontend: Optional[jnp.ndarray] = None):
+    x = params["embed"][tokens]  # (B,S,d)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    if frontend is not None and cfg.frontend_tokens > 0:
+        F = frontend.shape[1]
+        pos = jnp.arange(x.shape[1])[None, :, None]
+        x = jnp.where(pos < F,
+                      jnp.pad(frontend.astype(x.dtype),
+                              ((0, 0), (0, x.shape[1] - F), (0, 0))),
+                      x)
+    return constrain(x, "batch", None, None)
+
+
+def lm_logits(params, cfg, x):
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return layers.mask_padded_logits(logits.astype(jnp.float32), cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# train forward / loss
+# ---------------------------------------------------------------------------
+
+
+def backbone(params, cfg, x, positions, remat: bool = True):
+    """Scan the stacked groups. x: (B,S,d) -> (x, aux_loss)."""
+    def body(carry, p_group):
+        h, aux = carry
+        h, a = group_train(p_group, h, cfg, positions)
+        return (constrain(h, "batch", None, None), aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    return x, aux
+
+
+def forward_train(params, cfg, tokens, frontend=None, remat: bool = True):
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(params, cfg, tokens, frontend)
+    x, aux = backbone(params, cfg, x, positions, remat=remat)
+    return lm_logits(params, cfg, x), aux, x  # x: pre-norm hidden for MTP
+
+
+def _xent(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_xent(params, cfg, hidden, labels, mask, chunk: int = 512):
+    """Cross-entropy over a vocab-sharded head WITHOUT materialising the
+    full (B, S, V) float32 logits: scan over sequence chunks, recompute the
+    chunk's logits in backward (jax.checkpoint). The label logit is taken
+    via one-hot einsum so the gather never crosses the vocab sharding.
+    Returns (sum_nll, sum_mask)."""
+    x = layers.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    W = head_weight(params, cfg)
+    B, S, d = x.shape
+    vp = W.shape[1]
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(B, n, c, *t.shape[2:]), 1, 0)
+
+    def body(carry, xs):
+        xc, lc, mc = xs  # (B,c,d), (B,c), (B,c)
+        logits = constrain((xc @ W).astype(jnp.float32),
+                           "batch", None, "model")
+        # padded-vocab ids never win: mask to -inf
+        logits = layers.mask_padded_logits(logits, cfg.vocab_size)
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B,c)
+        onehot = jax.nn.one_hot(lc, vp, dtype=jnp.float32)
+        lab = jnp.einsum("bcv,bcv->bc", onehot, logits)
+        nll = (lse - lab) * mc
+        s_nll, s_m = carry
+        return (s_nll + jnp.sum(nll), s_m + jnp.sum(mc)), None
+
+    (s_nll, s_m), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+        (split(x), split(labels), split(mask)))
+    return s_nll, s_m
+
+
+def lm_loss(params, cfg, batch, aux_weight: float = 0.01,
+            mtp_weight: float = 0.3, remat: bool = True):
+    """batch: {"tokens": (B,S), "labels": (B,S), ["frontend"]: (B,F,d)}.
+
+    The vocab head runs through ``chunked_xent`` — full (B,S,V) float32
+    logits are never materialised (measured 10 GB/device for internvl2
+    before this; EXPERIMENTS.md §Perf iteration 0)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = embed_tokens(params, cfg, tokens, batch.get("frontend"))
+    hidden, aux = backbone(params, cfg, x, positions, remat=remat)
+    s_nll, s_m = chunked_xent(params, cfg, hidden, labels, mask)
+    loss = s_nll / jnp.maximum(s_m, 1.0)
+    metrics = {"xent": loss, "aux": aux}
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        # MTP depth-1: predict t+2 from (hidden_t, embed(label_t))
+        emb_next = params["embed"][jnp.minimum(labels, params["embed"].shape[0] - 1)]
+        h = jnp.concatenate([hidden.astype(emb_next.dtype), emb_next], axis=-1)
+        h = constrain(h @ params["mtp"]["proj"], "batch", None, None)
+        h, _ = _attn_layer_train(params["mtp"]["block"], h, cfg, positions,
+                                 _uses_moe(cfg, 0))
+        h = layers.rms_norm(h, params["mtp"]["norm"], cfg.norm_eps)
+        # labels shifted one more step
+        mtp_labels = jnp.concatenate(
+            [labels[:, 1:], jnp.zeros_like(labels[:, :1])], axis=1)
+        mtp_mask = jnp.concatenate(
+            [mask[:, 1:], jnp.zeros_like(mask[:, :1])], axis=1)
+        # reuse final_norm-free chunked head on the MTP hidden state
+        m_nll, m_m = chunked_xent(params, cfg, h, mtp_labels, mtp_mask)
+        mtp_loss = m_nll / jnp.maximum(m_m, 1.0)
+        metrics["mtp"] = mtp_loss
+        loss = loss + mtp_weight * mtp_loss
+    loss = loss + aux_weight * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return mla.init_mla_cache(cfg, batch, max_len, dtype)
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return mamba.init_mamba_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def group_layer_kinds(cfg):
+    bk = cfg.block_kind
+    if bk == "attn":
+        return ["attn"]
+    if bk == "mamba_attn":
+        g = cfg.attn_every
+        return ["attn" if i == g // 2 else "mamba" for i in range(g)]
+    if bk == "xlstm":
+        return list(cfg.xlstm_pattern)
+    raise ValueError(bk)
+
+
+def init_decode_caches(cfg, batch: int, max_len: int, dtype):
+    kinds = group_layer_kinds(cfg)
+    n = num_groups(cfg)
+
+    def one_group(_):
+        return {f"l{i}": _init_layer_cache(cfg, k, batch, max_len, dtype)
+                for i, k in enumerate(kinds)}
+
+    return jax.vmap(one_group)(jnp.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_decode(p, x, cache, cur_len, cfg, use_moe, seq_axis):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, cache = mla.mla_decode_step(p["attn"], h, cache, cur_len, cfg, seq_axis)
+    else:
+        a, cache = attention.decode_step_attention(
+            p["attn"], h, cache, cur_len, cfg, seq_axis)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _mlp_apply(p, h, cfg, use_moe)
+    return x + y, cache
+
+
+def group_decode(p_group, x, caches, cur_len, cfg, seq_axis):
+    kinds = group_layer_kinds(cfg)
+    new_caches = {}
+    for i, kind in enumerate(kinds):
+        p = p_group[f"l{i}"]
+        c = caches[f"l{i}"]
+        if kind == "attn":
+            x, c = _attn_layer_decode(p, x, c, cur_len, cfg, _uses_moe(cfg, i),
+                                      seq_axis)
+        elif kind == "mamba":
+            h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, c = mamba.mamba_decode_step(p["mamba"], h, c, cfg)
+            x = x + a
+            h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, _ = _mlp_apply(p, h, cfg, _uses_moe(cfg, i))
+            x = x + y
+        elif kind == "mlstm":
+            x, c = xlstm.mlstm_decode_step(p, x, c, cfg)
+        elif kind == "slstm":
+            x, c = xlstm.slstm_decode_step(p, x, c, cfg)
+        new_caches[f"l{i}"] = c
+    return x, new_caches
+
+
+def decode_step(params, cfg, token, caches, cur_len, seq_axis=None):
+    """token: (B,1) int32; cur_len: scalar int32 (tokens already cached).
+    Returns (logits (B,1,V), new caches)."""
+    x = embed_tokens(params, cfg, token)
+
+    def body(x, xs):
+        p_group, cache_group = xs
+        x, new_cache = group_decode(p_group, x, cache_group, cur_len, cfg, seq_axis)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    return lm_logits(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill (returns populated caches for handoff to the decode pool)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, tokens, frontend=None):
+    """Run the full prompt; returns (last-token logits, caches sized S).
+
+    Attention layers store their (k, v)/(ckv, kr); recurrent layers store
+    their end-of-prompt state. The caches pytree matches
+    ``init_decode_caches(cfg, B, S, dtype)`` so the KV-link transfer and the
+    decode pool can consume it directly.
+    """
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(params, cfg, tokens, frontend)
+    kinds = group_layer_kinds(cfg)
+
+    def body(carry, p_group):
+        h = carry
+        caches = {}
+        for i, kind in enumerate(kinds):
+            p = p_group[f"l{i}"]
+            if kind == "attn":
+                hn = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                if cfg.attn_kind == "mla":
+                    a, kv = mla.mla_forward(p["attn"], hn, cfg, positions)
+                else:
+                    a, (k, v) = attention.attention_forward(p["attn"], hn, cfg, positions)
+                    kv = {"k": k, "v": v}
+                h = h + a
+                hn = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+                y, _ = _mlp_apply(p, hn, cfg, _uses_moe(cfg, i))
+                h = h + y
+                caches[f"l{i}"] = kv
+            elif kind == "mamba":
+                hn = layers.rms_norm(h, p["ln1"], cfg.norm_eps)
+                # forward + end state
+                xz = hn @ p["mamba"]["in_proj"]
+                xin, z = jnp.split(xz, 2, axis=-1)
+                xin, conv_state = mamba._causal_conv(p["mamba"], xin, cfg)
+                a_el, b_el, C_ssm = mamba._ssm_inputs(p["mamba"], xin, cfg)
+                h0 = jnp.zeros((B, xin.shape[-1], cfg.mamba_d_state), jnp.float32)
+                h_seq, h_end = mamba._chunked_linear_scan(a_el, b_el, h0, 256)
+                y = jnp.einsum("bsdn,bsn->bsd", h_seq, C_ssm)
+                y = y + p["mamba"]["D"] * xin.astype(jnp.float32)
+                y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+                h = h + y @ p["mamba"]["out_proj"]
+                hn = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+                y2, _ = _mlp_apply(p, hn, cfg, _uses_moe(cfg, i))
+                h = h + y2
+                caches[f"l{i}"] = {"h": h_end, "conv": conv_state}
+            elif kind in ("mlstm", "slstm"):
+                # prefill recurrent blocks by running their forward and
+                # rebuilding state with a final decode step is wasteful;
+                # instead run forward then one pass to extract state via
+                # the recurrent path on the last token only (states are
+                # produced by scanning the whole prompt).
+                h, state = _xlstm_prefill_block(p, h, cfg, kind)
+                caches[f"l{i}"] = state
+        return h, caches
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    return lm_logits(params, cfg, x[:, -1:, :]), caches
+
+
+def _xlstm_prefill_block(p, x, cfg, kind):
+    """Forward an xLSTM block over the prompt AND return its end state."""
+    B, S, d = x.shape
+    if kind == "slstm":
+        H = cfg.num_heads
+        dh = d // H
+        xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        xg = (xn @ p["w_x"] + p["bias"]).astype(jnp.float32)
+        state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((B, d), -1e30, jnp.float32),)
+
+        def body(state, xg_t):
+            new = xlstm._slstm_cell(p, xg_t, state, H, dh)
+            return new, new[0]
+
+        state, hs = jax.lax.scan(body, state0, jnp.moveaxis(xg, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+        h = layers.rms_norm(h, p["out_norm"], cfg.norm_eps)
+        h = jax.nn.gelu(h @ p["up_gate"], approximate=True) @ p["up_out"]
+        cache = {"h": state[0], "c": state[1], "n": state[2], "m": state[3]}
+        return x + h, cache
+
+    # mlstm: chunked forward, carrying (C, n, m); also need conv tail
+    H = cfg.num_heads
+    q, k, v, i_g, f_g, z = xlstm._mlstm_qkvif(p, x, cfg)
+    di = z.shape[-1]
+    dh = di // H
+    Lc = min(256, S)
+    while S % Lc:
+        Lc //= 2
+    n = S // Lc
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(B, n, Lc, *t.shape[2:]), 1, 0)
+
+    def body(state, xs):
+        qc, kc, vc, ic, fc = xs
+        hblk, state = xlstm._mlstm_chunk(qc, kc, vc, ic, fc, state)
+        return state, hblk
+
+    state0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    state, hs = jax.lax.scan(body, state0, (split(q), split(k), split(v),
+                                            split(i_g), split(f_g)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)
+    h = layers.rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = x + h @ p["down"]
+    # conv tail state for decode continuation
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    xm = jnp.split(xn @ p["up"], 2, axis=-1)[0]
+    conv = jnp.concatenate(
+        [jnp.zeros((B, 3, di), xm.dtype), xm], axis=1)[:, -3:, :]
+    cache = {"C": state[0], "n": state[1], "m": state[2], "conv": conv}
+    return out, cache

@@ -1,0 +1,294 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form) and
+sLSTM (scalar memory, inherently sequential — published property).
+
+mLSTM stabilised exponential gating (per head):
+  log_f_t = logsigmoid(f̃_t)
+  b_t     = Σ_{s<=t} log_f_s                     (cumulative decay)
+  m_t     = max(b_t + m_0, b_t + cummax_s(i_s − b_s))
+  C_t     = Σ_s exp(b_t − b_s + i_s − m_t) v_s k_sᵀ + exp(b_t + m_0 − m_t) C_0
+  n_t     = (same weights over k_s, n_0)
+  h̃_t    = C_t q_t / max(|n_t · q_t|, 1)
+
+Training/prefill evaluates this with within-chunk quadratic attention-like
+einsums + a sequential cross-chunk carry (C, n, m); decode is the O(1)
+recurrent update. Both are validated against each other in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d  # pre-up-projection factor 2 (xLSTM paper)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": layers.init_rms_norm(d, dtype),
+        "up": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di), jnp.float32) / 2.0).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": layers.dense_init(ks[2], di, di, dtype),
+        "wk": layers.dense_init(ks[3], di, di, dtype),
+        "wv": layers.dense_init(ks[4], di, di, dtype),
+        "w_if": layers.dense_init(ks[5], di, 2 * H, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(dtype),
+        "out_norm": layers.init_rms_norm(di, dtype),
+        "down": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_qkvif(params, x, cfg):
+    """x: (B,S,d) -> q,k,v: (B,S,H,dh); i,f: (B,S,H); z gate: (B,S,di)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    xn = layers.rms_norm(x, params["norm"], cfg.norm_eps)
+    up = xn @ params["up"]
+    xm, z = jnp.split(up, 2, axis=-1)  # (B,S,di)
+    di = xm.shape[-1]
+    # causal conv(4) + silu on the q/k path
+    pad = jnp.zeros((B, 3, di), xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    xc = sum(xp[:, j:j + S, :] * params["conv_w"][j] for j in range(4))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    dh = di // H
+    q = (xc @ params["wq"]).reshape(B, S, H, dh)
+    k = ((xc @ params["wk"]) / math.sqrt(dh)).reshape(B, S, H, dh)
+    v = (xm @ params["wv"]).reshape(B, S, H, dh)
+    gif = (xm @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    i_gate, f_gate = jnp.split(gif, 2, axis=-1)  # (B,S,H)
+    return q, k, v, i_gate, f_gate, z
+
+
+def _mlstm_chunk(q, k, v, i_g, f_g, state):
+    """One chunk of the chunkwise-parallel mLSTM. q,k,v: (B,Lc,H,dh);
+    i_g,f_g: (B,Lc,H); state: (C0, n0, m0) with shapes
+    (B,H,dh,dh), (B,H,dh), (B,H)."""
+    C0, n0, m0 = state
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    log_f = _logsigmoid(f_g)  # (B,Lc,H)
+    b = jnp.cumsum(log_f, axis=1)
+    g = i_g - b  # (B,Lc,H)
+    m_intra = jax.lax.cummax(g, axis=1)
+    m_t = b + jnp.maximum(m0[:, None], m_intra)  # (B,Lc,H)
+
+    # intra-chunk weights: w[t,s] = exp(b_t - b_s + i_s - m_t),  s <= t
+    expo = (b[:, :, None] - b[:, None, :] + i_g[:, None, :]
+            - m_t[:, :, None])  # (B,Lc_t,Lc_s,H)
+    Lc = q.shape[1]
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+    w = jnp.where(causal[None, :, :, None], jnp.exp(expo), 0.0)
+
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * w  # (B,Lc,Lc,H)
+    num_intra = jnp.einsum("btsh,bshd->bthd", scores, vf)
+    # denominator: n_t · q_t = Σ_s w_ts (k_s · q_t) + decay (n_0 · q_t)
+    den_intra = jnp.sum(scores, axis=2)  # (B,Lc,H)
+
+    decay0 = jnp.exp(b + m0[:, None] - m_t)  # (B,Lc,H)
+    # C is v⊗k (C[d,e] = v_d k_e): q contracts the k-dim (e), matching the
+    # decode step's einsum("bhde,bhe->bhd", C, q)
+    num_inter = jnp.einsum("bthe,bhde->bthd", qf, C0) * decay0[..., None]
+    den_inter = jnp.einsum("bthd,bhd->bth", qf, n0) * decay0
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]  # (B,Lc,H,dh)
+
+    # chunk-end state (t = Lc-1)
+    mL = m_t[:, -1]  # (B,H)
+    wL = jnp.exp(b[:, -1:, :] - b + i_g - mL[:, None])  # (B,Lc,H) weights at t=L
+    C_end = jnp.einsum("bsh,bshd,bshe->bhde", wL, vf, kf) \
+        + jnp.exp(b[:, -1] + m0 - mL)[..., None, None] * C0
+    n_end = jnp.einsum("bsh,bshd->bhd", wL, kf) \
+        + jnp.exp(b[:, -1] + m0 - mL)[..., None] * n0
+    return h, (C_end, n_end, mL)
+
+
+def mlstm_forward(params, x, cfg, chunk: int = 256):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    q, k, v, i_g, f_g, z = _mlstm_qkvif(params, x, cfg)
+    di = z.shape[-1]
+    dh = di // H
+    Lc = min(chunk, S)
+    while S % Lc:
+        Lc //= 2
+    n = S // Lc
+
+    def body(state, xs):
+        qc, kc, vc, ic, fc = xs
+        h, state = _mlstm_chunk(qc, kc, vc, ic, fc, state)
+        return state, h
+
+    def split(t):  # (B,S,...) -> (n,B,Lc,...)
+        return jnp.moveaxis(t.reshape(B, n, Lc, *t.shape[2:]), 1, 0)
+
+    state0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    # recompute chunk-local (Lc,Lc) score blocks in backward
+    _, hs = jax.lax.scan(jax.checkpoint(body), state0,
+                         (split(q), split(k), split(v),
+                          split(i_g), split(f_g)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)
+    h = layers.rms_norm(h.astype(x.dtype), params["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return x + h @ params["down"]
+
+
+def init_mlstm_cache(cfg, batch: int, dtype):
+    H = cfg.num_heads
+    di = 2 * cfg.d_model
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+def mlstm_decode_step(params, x_step, cache, cfg):
+    """x_step: (B,1,d) -> recurrent O(1) update."""
+    B = x_step.shape[0]
+    H = cfg.num_heads
+    xn = layers.rms_norm(x_step, params["norm"], cfg.norm_eps)
+    up = xn @ params["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    di = xm.shape[-1]
+    xp = jnp.concatenate([cache["conv"].astype(xm.dtype), xm], axis=1)  # (B,4,di)
+    xc = sum(xp[:, j:j + 1, :] * params["conv_w"][j] for j in range(4))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    dh = di // H
+    q = (xc @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = ((xc @ params["wk"]) / math.sqrt(dh)).reshape(B, H, dh).astype(jnp.float32)
+    v = (xm @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gif = (xm @ params["w_if"] + params["b_if"]).astype(jnp.float32)[:, 0]
+    i_g, f_g = jnp.split(gif, 2, axis=-1)  # (B,H)
+
+    log_f = _logsigmoid(f_g)
+    m_new = jnp.maximum(log_f + cache["m"], i_g)
+    f_t = jnp.exp(log_f + cache["m"] - m_new)
+    i_t = jnp.exp(i_g - m_new)
+    C = f_t[..., None, None] * cache["C"] + i_t[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v, k)
+    n_ = f_t[..., None] * cache["n"] + i_t[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.einsum("bhd,bhd->bh", n_, q)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = h.reshape(B, 1, di).astype(x_step.dtype)
+    h = layers.rms_norm(h, params["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    new_cache = {"C": C, "n": n_, "m": m_new, "conv": xp[:, 1:, :]}
+    return x_step + h @ params["down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": layers.init_rms_norm(d, dtype),
+        # input weights for gates z,i,f,o
+        "w_x": layers.dense_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights, per head: (H, dh, 4*dh)
+        "w_h": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                / math.sqrt(dh)).astype(dtype),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]).astype(dtype),
+        "out_norm": layers.init_rms_norm(d, dtype),
+        # post-up-projection MLP (factor 4/3, gated)
+        "up_gate": layers.dense_init(ks[2], d, (4 * d) // 3, dtype),
+        "up_out": layers.dense_init(ks[3], (4 * d) // 3, d, dtype),
+    }
+
+
+def _slstm_cell(params, xg, state, H, dh):
+    """xg: (B, 4d) pre-computed input gates; state: (h,c,n,m) each (B,d)|..."""
+    h_prev, c_prev, n_prev, m_prev = state
+    B = xg.shape[0]
+    d = H * dh
+    rec = jnp.einsum("bhd,hde->bhe", h_prev.reshape(B, H, dh),
+                     params["w_h"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = xg + rec
+    z_g, i_g, f_g, o_g = jnp.split(g, 4, axis=-1)  # (B,d) each
+    z_t = jnp.tanh(z_g)
+    o_t = jax.nn.sigmoid(o_g)
+    log_f = _logsigmoid(f_g)
+    m_new = jnp.maximum(log_f + m_prev, i_g)
+    i_t = jnp.exp(i_g - m_new)
+    f_t = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_t * c_prev + i_t * z_t
+    n_new = f_t * n_prev + i_t
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params, x, cfg):
+    """Sequential scan over time (sLSTM has no parallel form)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    xn = layers.rms_norm(x, params["norm"], cfg.norm_eps)
+    xg = (xn @ params["w_x"] + params["bias"]).astype(jnp.float32)  # (B,S,4d)
+
+    state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, d), -1e30, jnp.float32),)
+
+    def body(state, xg_t):
+        new = _slstm_cell(params, xg_t, state, H, dh)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(body, state0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,d)
+    h = layers.rms_norm(h, params["out_norm"], cfg.norm_eps)
+    h = jax.nn.gelu(h @ params["up_gate"], approximate=True) @ params["up_out"]
+    return x + h
+
+
+def init_slstm_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode_step(params, x_step, cache, cfg):
+    B = x_step.shape[0]
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    xn = layers.rms_norm(x_step, params["norm"], cfg.norm_eps)
+    xg = (xn @ params["w_x"] + params["bias"]).astype(jnp.float32)[:, 0]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h_new, c_new, n_new, m_new = _slstm_cell(params, xg, state, H, dh)
+    h = h_new[:, None, :].astype(x_step.dtype)
+    h = layers.rms_norm(h, params["out_norm"], cfg.norm_eps)
+    h = jax.nn.gelu(h @ params["up_gate"], approximate=True) @ params["up_out"]
+    new_cache = {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+    return x_step + h, new_cache

@@ -1,0 +1,292 @@
+"""Event-driven cluster simulator: PD-disaggregated LLM pools + the Trinity
+vector pool, wired per a Fig. 2 placement.
+
+All device-level math (engines, kernels, models) is real JAX elsewhere;
+here queueing, links, failures and the closed control loop (u_kv, prefill
+P95 wait, decode stalls → adaptive r/τ_pre) evolve in simulated time with
+latencies from the calibrated roofline timing model. This is the harness
+behind benchmarks/bench_architectures.py and bench_scheduler.py.
+
+Fault tolerance at pool level:
+  · kill_prefill/kill_decode at time t — in-flight work re-queues; decode
+    victims lose device KV and re-prefill (counted),
+  · stragglers: slowdown factors; the dispatcher routes new work away from
+    instances whose step EWMA exceeds ``straggler_factor``× the pool median,
+  · elastic decode scaling on queue depth (optional).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.architectures import make_placements
+from repro.core.roofline_model import V5E, Hardware
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import VectorPool
+from repro.serving.engine import DecodeInstance, PrefillInstance
+from repro.serving.kv_cache import kv_bytes_per_token
+from repro.serving.kv_link import KVLink
+from repro.serving.request import ClusterMetrics, GenRequest, percentile
+
+
+class ClusterSim:
+    def __init__(self, model_cfg, pool_cfg, db, graph, *,
+                 placement: str = "disaggregated", policy: str = "trinity",
+                 n_prefill: int = 2, n_decode: int = 4,
+                 vector_replicas: int = 1, chips_per_instance: int = 8,
+                 decode_batch: int = 32, kv_link_bw: float = 40e9,
+                 hw: Hardware = V5E, poll_dt: float = 2e-4,
+                 straggler_factor: float = 2.5, elastic_decode: bool = False,
+                 use_pallas: Optional[bool] = False, seed: int = 0):
+        self.cfg = model_cfg
+        self.pool_cfg = pool_cfg
+        self.hw = hw
+        self.poll_dt = poll_dt
+        self.placement = make_placements(hw, chips_per_instance)[placement]
+        pl = self.placement
+
+        self.prefill_pool = [
+            PrefillInstance(i, model_cfg, chips_per_instance, hw=hw,
+                            capacity_factor=pl.llm_capacity_factor_prefill,
+                            contention=(pl.hbm_contention_factor
+                                        if pl.llm_capacity_factor_prefill < 1
+                                        else 1.0))
+            for i in range(n_prefill)]
+        self.decode_pool = [
+            DecodeInstance(i, model_cfg, chips_per_instance,
+                           max_batch=decode_batch, hw=hw,
+                           capacity_factor=pl.llm_capacity_factor_decode,
+                           contention=(pl.hbm_contention_factor
+                                       if pl.llm_capacity_factor_decode < 1
+                                       else 1.0),
+                           ep_penalty=pl.ep_dispatch_penalty)
+            for i in range(n_decode)]
+        self.vector_pool = VectorPool(pool_cfg, db, graph,
+                                      replicas=vector_replicas, policy=policy,
+                                      use_pallas=use_pallas, seed=seed)
+        self.kv_link = KVLink(bandwidth=kv_link_bw)
+
+        self.prefill_queue: deque[GenRequest] = deque()
+        self.decode_queue: deque[GenRequest] = deque()
+        self.metrics = ClusterMetrics()
+        self.straggler_factor = straggler_factor
+        self.elastic_decode = elastic_decode
+        self.max_decode_instances = n_decode * 2
+        self._events: list = []
+        self._eseq = itertools.count()
+        self._probe_cb: Dict[int, Callable] = {}
+        self._probe_rid = itertools.count(1 << 20)
+        self._pool_cursor = 0
+        self._recent_stalls: deque = deque(maxlen=256)
+        self.t_now = 0.0
+        self._chips = chips_per_instance
+
+    # ------------------------------------------------------------- events
+    def schedule(self, t: float, fn: Callable):
+        heapq.heappush(self._events, (max(t, self.t_now), next(self._eseq), fn))
+
+    def run(self, until: float):
+        self.schedule(self.t_now, self._poll_pool)
+        while self._events and self._events[0][0] <= until:
+            t, _, fn = heapq.heappop(self._events)
+            self.t_now = t
+            fn()
+        self.t_now = until
+        self.vector_pool.run_until(until)
+        self._collect_pool_completions()
+
+    # ------------------------------------------------------------ arrival
+    def arrive(self, req: GenRequest):
+        def _on_arrival():
+            if req.prefill_rag and self.pool_cfg is not None:
+                self._submit_probe(req, "prefill", self._after_prefill_rag)
+            else:
+                self._enqueue_prefill(req)
+
+        self.schedule(req.t_arrival, _on_arrival)
+
+    def _after_prefill_rag(self, req: GenRequest, vreq: VectorRequest):
+        req.t_retrieval_done = self.t_now
+        self._enqueue_prefill(req)
+
+    # ------------------------------------------------------------ prefill
+    def _enqueue_prefill(self, req: GenRequest):
+        self.prefill_queue.append(req)
+        self._try_start_prefill()
+
+    def _healthy(self, pool):
+        ew = [i.health.step_ewma for i in pool if i.health.alive]
+        med = np.median([e for e in ew if e > 0]) if any(e > 0 for e in ew) else 0
+        out = []
+        for inst in pool:
+            if not inst.health.alive:
+                continue
+            if med and inst.health.step_ewma > self.straggler_factor * med:
+                continue  # straggler: route around it
+            out.append(inst)
+        return out or [i for i in pool if i.health.alive]
+
+    def _try_start_prefill(self):
+        for inst in self._healthy(self.prefill_pool):
+            if inst.busy_until > self.t_now or not self.prefill_queue:
+                continue
+            batch, tokens = [], 0
+            while self.prefill_queue and tokens < inst.max_batch_tokens:
+                r = self.prefill_queue[0]
+                if batch and tokens + r.prompt_len > inst.max_batch_tokens:
+                    break
+                batch.append(self.prefill_queue.popleft())
+                tokens += r.prompt_len
+            if not batch:
+                continue
+            t_done = inst.start_batch(self.t_now, batch)
+            self.schedule(t_done, lambda i=inst, b=batch: self._finish_prefill(i, b))
+
+    def _finish_prefill(self, inst: PrefillInstance, batch: List[GenRequest]):
+        inst.current = []
+        for req in batch:
+            req.t_prefill_done = self.t_now
+            nbytes = req.prompt_len * kv_bytes_per_token(self.cfg)
+            t_kv = self.kv_link.transfer(self.t_now, nbytes) \
+                if nbytes else self.t_now
+            self.schedule(t_kv, lambda r=req: self._kv_arrived(r))
+        self._try_start_prefill()
+
+    # ------------------------------------------------------------- decode
+    def _kv_arrived(self, req: GenRequest):
+        req.t_kv_arrived = self.t_now
+        self.decode_queue.append(req)
+        self._try_admit_decode()
+
+    def _try_admit_decode(self):
+        for inst in self._healthy(self.decode_pool):
+            while self.decode_queue and inst.can_admit(self.decode_queue[0]):
+                inst.admit(self.decode_queue.popleft())
+            if inst.active and not inst.stepping:
+                inst.stepping = True
+                self.schedule(self.t_now + inst.step_time(self.t_now),
+                              lambda i=inst: self._decode_step(i))
+        if self.elastic_decode and len(self.decode_queue) > 4 * max(
+                1, len(self.decode_pool)) and \
+                len(self.decode_pool) < self.max_decode_instances:
+            self.decode_pool.append(DecodeInstance(
+                len(self.decode_pool), self.cfg, self._chips,
+                max_batch=self.decode_pool[0].max_batch, hw=self.hw))
+
+    def _decode_step(self, inst: DecodeInstance):
+        if not inst.health.alive:
+            return
+        done = []
+        for req in list(inst.active.values()):
+            if self.t_now < req.stalled_until:
+                continue  # stalled on a RAG probe: no token this step
+            req.tokens_out += 1
+            inst.tokens_emitted += 1
+            req.token_times.append(self.t_now)
+            if req.t_first_token is None:
+                req.t_first_token = self.t_now
+            if req.rag_interval and req.tokens_out < req.max_new_tokens and \
+                    req.tokens_out % req.rag_interval == 0:
+                req.stalled_until = float("inf")
+                self._submit_probe(req, "decode", self._after_decode_rag)
+            if req.tokens_out >= req.max_new_tokens:
+                done.append(req)
+        for req in done:
+            req.t_done = self.t_now
+            inst.release(req)
+            self.metrics.finished.append(req)
+        if inst.active:
+            self.schedule(self.t_now + inst.step_time(self.t_now),
+                          lambda: self._decode_step(inst))
+        else:
+            inst.stepping = False
+        self._try_admit_decode()
+
+    def _after_decode_rag(self, req: GenRequest, vreq: VectorRequest):
+        stall = self.t_now - (vreq.t_arrival)
+        req.stall_time += stall
+        req.stalled_until = self.t_now
+        self._recent_stalls.append(stall)
+
+    # ------------------------------------------------------- vector pool
+    def _submit_probe(self, req: GenRequest, kind: str, cb: Callable):
+        rtt = (self.placement.prefill_rtt if kind == "prefill"
+               else self.placement.decode_rtt)
+        rid = next(self._probe_rid)
+        ddl = self.t_now + (self.pool_cfg.prefill_deadline_ms if kind == "prefill"
+                            else self.pool_cfg.decode_deadline_ms) / 1e3
+        qvec = self._query_for(req)
+        vreq = VectorRequest(rid, kind, qvec, self.t_now + rtt / 2, ddl)
+        self._probe_cb[rid] = (req, cb, rtt)
+        self.vector_pool.submit(vreq)
+
+    def _query_for(self, req: GenRequest) -> np.ndarray:
+        rng = np.random.default_rng(req.rid * 7919 + req.tokens_out)
+        n = self.vector_pool.db.shape[0]
+        base = self.vector_pool.db[rng.integers(0, n)]
+        return np.asarray(base) + rng.normal(0, 0.1, size=base.shape).astype(
+            np.float32)
+
+    def _poll_pool(self):
+        self.vector_pool.run_until(self.t_now)
+        self._collect_pool_completions()
+        self._update_feedback()
+        self.schedule(self.t_now + self.poll_dt, self._poll_pool)
+
+    def _collect_pool_completions(self):
+        comp = self.vector_pool.metrics.completed
+        while self._pool_cursor < len(comp):
+            vreq = comp[self._pool_cursor]
+            self._pool_cursor += 1
+            entry = self._probe_cb.pop(vreq.rid, None)
+            if entry is None:
+                continue
+            req, cb, rtt = entry
+            self.schedule(max(self.t_now, vreq.t_completed + rtt / 2),
+                          lambda r=req, v=vreq, c=cb: c(r, v))
+
+    def _update_feedback(self):
+        fb = self.vector_pool.feedback
+        fb.u_kv = self.kv_link.utilization(self.t_now)
+        pre_waits = [v.wait for v in self.vector_pool.metrics.completed[-128:]
+                     if v.kind == "prefill"]
+        fb.prefill_p95_wait = percentile(pre_waits, 95) if pre_waits else 0.0
+        if self._recent_stalls:
+            # stall fraction proxy: stall per Δ tokens of decode time
+            avg_stall = float(np.mean(self._recent_stalls))
+            step = self.decode_pool[0].health.step_ewma or 1e-3
+            delta = max(1, next((r.rag_interval for i in self.decode_pool
+                                 for r in i.active.values()), 64))
+            fb.decode_stall_frac = avg_stall / max(avg_stall + step * delta,
+                                                   1e-9)
+
+    # ----------------------------------------------------------- failures
+    def kill_prefill(self, idx: int):
+        def _kill(inst=self.prefill_pool[idx]):
+            inst.health.alive = False
+            for req in inst.current:
+                req.re_prefills += 1
+                self.prefill_queue.appendleft(req)
+            inst.current = []
+            self._try_start_prefill()
+        return _kill
+
+    def kill_decode(self, idx: int):
+        def _kill(inst=self.decode_pool[idx]):
+            inst.health.alive = False
+            for req in list(inst.active.values()):
+                inst.release(req)
+                req.re_prefills += 1
+                req.stalled_until = 0.0
+                self.prefill_queue.append(req)  # device KV lost: re-prefill
+            self._try_start_prefill()
+        return _kill
+
+    def set_decode_slowdown(self, idx: int, factor: float):
+        def _slow(inst=self.decode_pool[idx]):
+            inst.health.slowdown = factor
+        return _slow

@@ -1,0 +1,68 @@
+"""Generation request lifecycle + SLO accounting."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    t_arrival: float
+    rag_interval: int = 0  # Δ: decode RAG probe every Δ tokens (0 = off)
+    prefill_rag: bool = True
+    # lifecycle timestamps
+    t_retrieval_done: Optional[float] = None
+    t_prefill_start: Optional[float] = None
+    t_prefill_done: Optional[float] = None
+    t_kv_arrived: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    tokens_out: int = 0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    stall_time: float = 0.0  # decode time spent waiting on RAG
+    stalled_until: float = 0.0
+    re_prefills: int = 0  # failure recoveries
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if len(self.token_times) < 2:
+            return None
+        ts = np.diff(np.asarray(self.token_times))
+        return float(np.mean(ts))
+
+
+def percentile(xs, q):
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    finished: List[GenRequest] = dataclasses.field(default_factory=list)
+
+    def summary(self, t_elapsed: float) -> dict:
+        fin = self.finished
+        toks = sum(r.tokens_out for r in fin)
+        decode_time = sum((r.t_done or 0) - (r.t_first_token or 0) for r in fin)
+        stall = sum(r.stall_time for r in fin)
+        return {
+            "requests": len(fin),
+            "throughput_tok_s": toks / max(t_elapsed, 1e-9),
+            "ttft_p50": percentile([r.ttft for r in fin], 50),
+            "ttft_p95": percentile([r.ttft for r in fin], 95),
+            "tpot_p50": percentile([r.tpot for r in fin], 50),
+            "tpot_p95": percentile([r.tpot for r in fin], 95),
+            "decode_stall_frac": stall / max(decode_time, 1e-9),
+            "re_prefills": sum(r.re_prefills for r in fin),
+        }

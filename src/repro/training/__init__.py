@@ -1,0 +1,1 @@
+"""Training substrate: raw-JAX AdamW, grad-accumulated train step, data."""

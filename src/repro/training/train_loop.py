@@ -1,0 +1,120 @@
+"""Train-step factory (grad accumulation × remat × MoE aux) + host Trainer
+with checkpoint/restart fault tolerance.
+
+``make_train_step`` builds the function the dry-run lowers on the
+production mesh: microbatch scan (keeps MoE dispatch buffers and activation
+memory bounded), per-layer remat inside the model, AdamW update with
+sharded moments.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    The batch's leading dim must divide by num_microbatches; gradients are
+    averaged across microbatches via a lax.scan (sequential accumulation —
+    live activation memory is one microbatch's worth)."""
+
+    def loss_for(params, mb):
+        return model_zoo.loss_fn(cfg, params, mb)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            from repro.distributed.sharding import constrain
+
+            def split(x):
+                x = x.reshape(num_microbatches, x.shape[0] // num_microbatches,
+                              *x.shape[1:])
+                # re-pin the batch sharding: GSPMD loses it across the
+                # reshape+scan boundary (EXPERIMENTS.md §Perf iteration 0)
+                return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+            mbs = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_for, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / num_microbatches,
+                    g_acc, g)
+                return (g_acc, l_acc + loss / num_microbatches), metrics
+
+            (grads, loss), metrics = jax.lax.scan(
+                acc, (zero_g, jnp.float32(0.0)), mbs)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss if num_microbatches > 1 else metrics["loss"]
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Host loop: jitted step + periodic atomic checkpoints + resume.
+
+    Fault tolerance contract (tested in tests/test_checkpoint.py): a run
+    killed at any point resumes from the latest complete checkpoint with
+    bit-identical params/opt-state and a data pipeline that replays the
+    exact step sequence (data.batch_at is pure in step)."""
+
+    def __init__(self, cfg, data, opt_cfg: Optional[AdamWConfig] = None,
+                 num_microbatches: int = 1, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 50, seed: int = 0):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        self.cfg = cfg
+        self.data = data
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_every = checkpoint_every
+        self.step_fn = jax.jit(make_train_step(cfg, self.opt_cfg,
+                                               num_microbatches),
+                               donate_argnums=(0, 1))
+        restored = self.ckpt.restore_latest() if self.ckpt else None
+        if restored is not None:
+            self.params, self.opt_state, self.step = restored
+        else:
+            self.params = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+            self.opt_state = init_opt_state(self.params)
+            self.step = 0
+
+    def run(self, num_steps: int, log_every: int = 10, log=print):
+        history = []
+        t0 = time.time()
+        while self.step < num_steps:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch_at(self.step).items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if log and self.step % log_every == 0:
+                log(f"step {self.step:5d} loss {loss:.4f} "
+                    f"({(time.time()-t0)/self.step:.2f}s/step)")
+            if self.ckpt and self.step % self.checkpoint_every == 0:
+                self.ckpt.save(self.params, self.opt_state, self.step)
+        if self.ckpt:
+            self.ckpt.save(self.params, self.opt_state, self.step)
+        return history

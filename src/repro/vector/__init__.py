@@ -1,0 +1,1 @@
+"""Vector-search substrate: datasets, CAGRA-like graph index, baselines."""

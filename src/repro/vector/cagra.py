@@ -1,0 +1,186 @@
+"""Per-request batched graph search — the baseline Trinity §3.2 improves on.
+
+Semantics (shared with the continuous-batching engine in repro/core):
+  · per-query state: topM (ids, dists), expanded flags, visited hash table
+  · one *extend* = pick ≤ p best unexpanded topM entries, fetch their D
+    neighbours, drop visited, compute distances, merge into topM
+  · converge when no unexpanded entry remains in topM
+
+"Per-request batching" = a batch of queries steps in lockstep and the batch
+only returns when EVERY query has converged (or max_iters) — the stragglers
+hold the whole launch, which is exactly the latency-jitter argument of the
+paper. All shapes fixed; jit-compiled once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e30)
+HASH_MULT = jnp.uint32(2654435761)  # Knuth multiplicative hash
+
+
+class SearchState(NamedTuple):
+    top_ids: jnp.ndarray  # (Q, M) int32, -1 empty
+    top_dists: jnp.ndarray  # (Q, M) f32
+    expanded: jnp.ndarray  # (Q, M) bool
+    visited: jnp.ndarray  # (Q, V) int32 hash table, -1 empty
+    done: jnp.ndarray  # (Q,) bool
+    extends: jnp.ndarray  # (Q,) int32 — extend steps consumed (for timing)
+
+
+def _hash_probe(visited, ids, num_probes: int = 4):
+    """Lookup+insert ids into per-query open-addressing tables.
+
+    visited: (V,) int32; ids: (C,) int32 (-1 = inactive).
+    Returns (new_visited, was_seen (C,) bool). Sequential over C (candidate
+    lists are short); lax.fori_loop keeps it jittable.
+    """
+    V = visited.shape[0]
+
+    def body(i, carry):
+        vis, seen = carry
+        cid = ids[i]
+
+        def probe(j, st):
+            vis_, seen_i, inserted = st
+            slot = ((cid.astype(jnp.uint32) * HASH_MULT
+                     + j.astype(jnp.uint32)) % jnp.uint32(V)).astype(jnp.int32)
+            cur = vis_[slot]
+            hit = cur == cid
+            empty = cur == -1
+            do_insert = empty & (~inserted) & (~hit)
+            vis_ = jax.lax.cond(do_insert,
+                                lambda v: v.at[slot].set(cid),
+                                lambda v: v, vis_)
+            return vis_, seen_i | hit, inserted | do_insert | hit
+
+        vis, seen_i, _ = jax.lax.fori_loop(
+            0, num_probes, probe, (vis, False, False))
+        active = cid >= 0
+        return vis, seen.at[i].set(seen_i & active)
+
+    seen0 = jnp.zeros(ids.shape, bool)
+    return jax.lax.fori_loop(0, ids.shape[0], body,
+                             (visited, seen0))
+
+
+def _merge_topm(top_ids, top_dists, expanded, cand_ids, cand_dists):
+    """Merge candidates into topM with exact id-dedup (existing entry wins).
+
+    top_*: (M,) state; cand_*: (C,). Returns new (ids, dists, expanded)."""
+    M = top_ids.shape[0]
+    ids = jnp.concatenate([top_ids, cand_ids])
+    dists = jnp.concatenate([top_dists, cand_dists])
+    exp = jnp.concatenate([expanded, jnp.zeros(cand_ids.shape, bool)])
+    is_new = jnp.concatenate([jnp.zeros(M, bool), jnp.ones(cand_ids.shape, bool)])
+
+    # sort by (id, is_new): equal ids adjacent, existing copy first
+    # (int32-safe: requires N < 2**30, true for every pool config)
+    key = ids * 2 + is_new.astype(jnp.int32)
+    key = jnp.where(ids < 0, jnp.iinfo(jnp.int32).max, key)  # empties last
+    order = jnp.argsort(key)
+    ids_s, dists_s, exp_s = ids[order], dists[order], exp[order]
+    dup = jnp.concatenate([jnp.array([False]), ids_s[1:] == ids_s[:-1]])
+    dists_s = jnp.where(dup, INF, dists_s)
+    ids_s = jnp.where(dup, -1, ids_s)
+
+    # final rank by distance, keep M best
+    order2 = jnp.argsort(dists_s)
+    return ids_s[order2][:M], dists_s[order2][:M], exp_s[order2][:M]
+
+
+def _extend_one(db, graph, query, state_q, p: int):
+    """One extend step for ONE query. state_q: per-query slices."""
+    top_ids, top_dists, expanded, visited = state_q
+    M = top_ids.shape[0]
+    D = graph.shape[1]
+
+    # pick ≤ p best unexpanded parents
+    cand_rank = jnp.where(expanded | (top_ids < 0), INF, top_dists)
+    parent_ix = jnp.argsort(cand_rank)[:p]  # (p,)
+    parent_ok = jnp.take(cand_rank, parent_ix) < INF
+    parents = jnp.where(parent_ok, jnp.take(top_ids, parent_ix), -1)
+    expanded = expanded.at[parent_ix].set(expanded[parent_ix] | parent_ok)
+
+    # gather neighbours, drop visited
+    nbrs = jnp.where(parents[:, None] >= 0,
+                     graph[jnp.maximum(parents, 0)], -1).reshape(-1)  # (p*D,)
+    visited, seen = _hash_probe(visited, nbrs)
+    nbrs = jnp.where(seen, -1, nbrs)
+
+    # distances (per-query fallback path; engines batch this via the
+    # fixed-shape Pallas distance kernel instead)
+    x = db[jnp.maximum(nbrs, 0)].astype(jnp.float32)
+    dist = jnp.sum((x - query.astype(jnp.float32)) ** 2, axis=1)
+    dist = jnp.where(nbrs >= 0, dist, INF)
+
+    top_ids, top_dists, expanded = _merge_topm(
+        top_ids, top_dists, expanded, nbrs, dist)
+    did_work = jnp.any(parent_ok)
+    return (top_ids, top_dists, expanded, visited), did_work
+
+
+def init_state(db, graph, queries, top_m: int, visited_slots: int,
+               num_entries: int = 8, seed: int = 0):
+    """Seed each query's topM with random entry points."""
+    Q = queries.shape[0]
+    N = db.shape[0]
+    key = jax.random.PRNGKey(seed)
+    entries = jax.random.randint(key, (Q, num_entries), 0, N)
+    x = db[entries].astype(jnp.float32)  # (Q, E, d)
+    d = jnp.sum((x - queries[:, None].astype(jnp.float32)) ** 2, axis=-1)
+    pad = top_m - num_entries
+    top_ids = jnp.concatenate(
+        [entries.astype(jnp.int32), jnp.full((Q, pad), -1, jnp.int32)], axis=1)
+    top_dists = jnp.concatenate([d, jnp.full((Q, pad), INF)], axis=1)
+    expanded = jnp.zeros((Q, top_m), bool)
+    visited = jnp.full((Q, visited_slots), -1, jnp.int32)
+
+    def ins(vis, ids):
+        vis, _ = _hash_probe(vis, ids)
+        return vis
+
+    visited = jax.vmap(ins)(visited, entries.astype(jnp.int32))
+    return SearchState(top_ids, top_dists, expanded, visited,
+                       jnp.zeros(Q, bool), jnp.zeros(Q, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("top_m", "p", "max_iters",
+                                             "visited_slots", "num_entries"))
+def search_batch(db, graph, queries, *, top_m: int = 32, p: int = 2,
+                 max_iters: int = 48, visited_slots: int = 512,
+                 num_entries: int = 8):
+    """Per-request batched search: lockstep extends until ALL converge.
+
+    Returns (top_ids (Q,M), top_dists (Q,M), extends (Q,), iters_run)."""
+    state = init_state(db, graph, queries, top_m, visited_slots, num_entries)
+
+    def step(carry):
+        state, it = carry
+
+        def one(q, tid, td, ex, vis, done):
+            (tid2, td2, ex2, vis2), did = _extend_one(
+                db, graph, q, (tid, td, ex, vis), p)
+            # frozen if done
+            keep = lambda new, old: jnp.where(done, old, new)
+            return (keep(tid2, tid), keep(td2, td), keep(ex2, ex),
+                    keep(vis2, vis), did & ~done)
+
+        tid, td, ex, vis, did = jax.vmap(one)(
+            queries, state.top_ids, state.top_dists, state.expanded,
+            state.visited, state.done)
+        newly_done = ~did
+        extends = state.extends + jnp.where(state.done, 0, 1)
+        return (SearchState(tid, td, ex, vis, state.done | newly_done,
+                            extends), it + 1)
+
+    def cond(carry):
+        state, it = carry
+        return (~jnp.all(state.done)) & (it < max_iters)
+
+    state, iters = jax.lax.while_loop(cond, step, (state, jnp.int32(0)))
+    return state.top_ids, state.top_dists, state.extends, iters

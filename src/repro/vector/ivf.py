@@ -1,0 +1,61 @@
+"""IVF-flat baseline (paper §1: 'production systems adopt IVF/IMI …').
+
+Coarse k-means quantizer + inverted lists; query scans ``nprobe`` nearest
+lists exactly. Fixed-shape device layout (padded lists) so the same roofline
+arguments apply: per probed row, d MACs per d·4 gathered bytes — the same
+memory-bound regime as the graph engine, but with strictly more rows
+touched at equal recall (benchmarks show graph < IVF extend counts; that is
+WHY Trinity's engine is graph-based)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class IVFFlat:
+    def __init__(self, db: np.ndarray, nlist: int = 64, iters: int = 10,
+                 seed: int = 0):
+        N, d = db.shape
+        rng = np.random.default_rng(seed)
+        centroids = db[rng.choice(N, nlist, replace=False)].astype(np.float32)
+        dbf = db.astype(np.float32)
+        for _ in range(iters):  # Lloyd's
+            d2 = (np.sum(dbf ** 2, 1)[:, None]
+                  - 2 * dbf @ centroids.T + np.sum(centroids ** 2, 1)[None])
+            assign = np.argmin(d2, 1)
+            for c in range(nlist):
+                members = dbf[assign == c]
+                if len(members):
+                    centroids[c] = members.mean(0)
+        d2 = (np.sum(dbf ** 2, 1)[:, None]
+              - 2 * dbf @ centroids.T + np.sum(centroids ** 2, 1)[None])
+        assign = np.argmin(d2, 1)
+        self.centroids = jnp.asarray(centroids)
+        max_len = max(int((assign == c).sum()) for c in range(nlist))
+        ids = np.full((nlist, max_len), -1, np.int32)
+        for c in range(nlist):
+            members = np.nonzero(assign == c)[0]
+            ids[c, :len(members)] = members
+        self.list_ids = jnp.asarray(ids)  # (nlist, max_len), -1 padded
+        self.db = jnp.asarray(dbf)
+        self.nlist = nlist
+
+    def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 8):
+        """Returns (ids (Q,k), dists (Q,k), rows_scanned (Q,))."""
+        q = jnp.asarray(queries, jnp.float32)
+
+        @jax.jit
+        def _one(qv):
+            cd = jnp.sum((self.centroids - qv) ** 2, 1)
+            probe = jax.lax.top_k(-cd, nprobe)[1]  # nearest lists
+            cand = self.list_ids[probe].reshape(-1)  # (nprobe*max_len,)
+            x = self.db[jnp.maximum(cand, 0)]
+            dist = jnp.sum((x - qv) ** 2, 1)
+            dist = jnp.where(cand >= 0, dist, jnp.inf)
+            top = jax.lax.top_k(-dist, k)
+            return cand[top[1]], -top[0], jnp.sum(cand >= 0)
+
+        ids, dists, rows = jax.vmap(_one)(q)
+        return np.asarray(ids), np.asarray(dists), np.asarray(rows)

@@ -1,0 +1,36 @@
+"""Exact kNN oracle + recall metric (ground truth for all ANN engines)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def exact_knn(db: np.ndarray, queries: np.ndarray, k: int,
+              metric: str = "l2", block: int = 1024):
+    """Brute-force top-k. Returns (ids (Q,k), dists (Q,k))."""
+    Q = queries.shape[0]
+    ids = np.zeros((Q, k), np.int32)
+    dists = np.zeros((Q, k), np.float32)
+    db_sq = np.sum(db.astype(np.float32) ** 2, axis=1)
+    for s in range(0, Q, block):
+        q = queries[s:s + block].astype(np.float32)
+        if metric == "l2":
+            d = (np.sum(q ** 2, axis=1)[:, None] - 2.0 * q @ db.T + db_sq[None, :])
+        elif metric == "ip":
+            d = -(q @ db.T)
+        else:
+            raise ValueError(metric)
+        idx = np.argpartition(d, k, axis=1)[:, :k]
+        dd = np.take_along_axis(d, idx, axis=1)
+        order = np.argsort(dd, axis=1)
+        ids[s:s + block] = np.take_along_axis(idx, order, axis=1)
+        dists[s:s + block] = np.take_along_axis(dd, order, axis=1)
+    return ids, dists
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """found/true: (Q, k). Fraction of true neighbors recovered."""
+    Q, k = true_ids.shape
+    hits = 0
+    for i in range(Q):
+        hits += len(set(found_ids[i, :k].tolist()) & set(true_ids[i].tolist()))
+    return hits / (Q * k)

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# src/ layout without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """The suite compiles hundreds of XLA:CPU programs; without freeing
+    executables the CPU JIT eventually fails to materialize new dylib
+    symbols late in a single-process run."""
+    yield
+    import jax
+
+    jax.clear_caches()

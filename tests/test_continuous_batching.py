@@ -1,0 +1,102 @@
+"""Trinity §3.2 continuous-batching engine: recall parity with the
+per-request baseline, kernel-path equivalence, slot recycling."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.continuous_batching import ContinuousBatchingEngine
+from repro.vector.cagra import search_batch
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+from repro.vector.ref import exact_knn, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(3000, 64, num_clusters=24, num_queries=48,
+                               seed=5)
+    graph = make_cagra_graph(db, degree=16, seed=5)
+    true_ids, _ = exact_knn(db, queries, 10)
+    cfg = VectorPoolConfig(num_vectors=3000, dim=64, graph_degree=16,
+                           max_requests=16, top_m=32, parents_per_step=2,
+                           task_batch=1024, visited_slots=512, top_k=10)
+    return cfg, db, graph, queries, true_ids
+
+
+def _drain(engine, queries):
+    results = {}
+    qi = 0
+    for _ in range(10_000):
+        while engine.num_free > 0 and qi < len(queries):
+            engine.admit(qi, queries[qi])
+            qi += 1
+        if engine.num_active == 0 and qi >= len(queries):
+            break
+        comps, _ = engine.step()
+        for rid, ids, dists, ext in comps:
+            results[rid] = ids
+    return results
+
+
+def test_recall_parity_with_per_request_baseline(setup):
+    """Paper claim: continuous batching 'keeps search accuracy/recall
+    behaviour intact'."""
+    cfg, db, graph, queries, true_ids = setup
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False)
+    results = _drain(eng, queries)
+    found = np.stack([results[i] for i in range(len(queries))])
+    r_cont = recall_at_k(found, true_ids)
+
+    top_ids, _, _, _ = search_batch(
+        jnp.asarray(db), jnp.asarray(graph), jnp.asarray(queries),
+        top_m=cfg.top_m, p=cfg.parents_per_step, max_iters=64, num_entries=16)
+    r_base = recall_at_k(np.asarray(top_ids)[:, :10], true_ids)
+    assert r_cont > 0.85
+    assert abs(r_cont - r_base) < 0.08, (r_cont, r_base)
+
+
+def test_pallas_and_jnp_paths_identical(setup):
+    cfg, db, graph, queries, _ = setup
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=True, seed=9)
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=9)
+    for i in range(6):
+        e1.admit(i, queries[i])
+        e2.admit(i, queries[i])
+    r1 = {rid: ids for rid, ids, _, _ in e1.run_to_completion()}
+    r2 = {rid: ids for rid, ids, _, _ in e2.run_to_completion()}
+    assert r1.keys() == r2.keys()
+    for k in r1:
+        np.testing.assert_array_equal(r1[k], r2[k])
+
+
+def test_slots_recycled_and_new_arrivals_join_next_batch(setup):
+    cfg, db, graph, queries, _ = setup
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False)
+    for i in range(cfg.max_requests):
+        eng.admit(i, queries[i])
+    assert eng.num_free == 0
+    done = []
+    for _ in range(200):
+        comps, _ = eng.step()
+        done.extend(comps)
+        if comps:
+            break
+    assert eng.num_free == len(done) > 0
+    # a new arrival is admitted into a recycled slot and completes
+    eng.admit(999, queries[20])
+    assert eng.num_free == len(done) - 1
+    out = eng.run_to_completion()
+    assert any(rid == 999 for rid, *_ in out)
+
+
+def test_early_exit_no_infinite_loop(setup):
+    cfg, db, graph, queries, _ = setup
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False)
+    eng.admit(0, queries[0])
+    out = eng.run_to_completion(max_steps=128)
+    assert len(out) == 1
+    assert eng.num_active == 0
+    rid, ids, dists, ext = out[0]
+    assert 0 < ext <= 128
+    assert np.all(np.diff(dists) >= -1e-5)

@@ -1,0 +1,92 @@
+"""IVF-flat baseline + prefill→decode cache handoff."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model_zoo
+from repro.serving.kv_cache import pad_prefill_caches
+from repro.vector.dataset import make_dataset
+from repro.vector.ivf import IVFFlat
+from repro.vector.ref import exact_knn, recall_at_k
+
+
+def test_ivf_recall_and_cost():
+    db, queries = make_dataset(4000, 64, num_clusters=32, num_queries=64,
+                               seed=13)
+    idx = IVFFlat(db, nlist=64, iters=6)
+    true_ids, _ = exact_knn(db, queries, 10)
+    ids, dists, rows = idx.search(queries, k=10, nprobe=8)
+    r = recall_at_k(ids, true_ids)
+    assert r > 0.85, r
+    # results sorted, no padding leaks
+    assert np.all(np.diff(dists, axis=1) >= -1e-4)
+    assert np.all(ids >= 0)
+    # cost scales with nprobe; one list is ~N/nlist rows
+    assert rows.mean() > 4000 / 64  # scanned more than one list
+    ids2, _, rows2 = idx.search(queries, k=10, nprobe=16)
+    assert rows2.mean() > rows.mean()
+    assert recall_at_k(ids2, true_ids) >= r - 0.02
+
+
+def test_ivf_and_graph_reach_same_recall_with_comparable_cost():
+    """Both baselines reach the recall bar; actual distance evaluations per
+    query are the comparable cost metric (at this toy N≈4k they are of the
+    same order — IVF's O(N·nprobe/nlist) only loses to the graph's
+    ~O(log N) at production N; the engine's advantage HERE is structural:
+    the extend step is the continuous-batching unit, IVF's monolithic list
+    scan is not)."""
+    from repro.configs.base import VectorPoolConfig
+    from repro.core.continuous_batching import ContinuousBatchingEngine
+    from repro.vector.graph import make_cagra_graph
+
+    db, queries = make_dataset(4000, 64, num_clusters=32, num_queries=32,
+                               seed=14)
+    true_ids, _ = exact_knn(db, queries, 10)
+    idx = IVFFlat(db, nlist=64, iters=6)
+    ivf_ids, _, rows = idx.search(queries, k=10, nprobe=8)
+
+    graph = make_cagra_graph(db, 16, seed=14)
+    cfg = VectorPoolConfig(num_vectors=4000, dim=64, graph_degree=16,
+                           max_requests=32, top_m=32, task_batch=1024,
+                           visited_slots=512, top_k=10)
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False)
+    for i in range(len(queries)):
+        eng.admit(i, queries[i])
+    done = eng.run_to_completion()
+    g_ids = np.stack([ids for _, ids, _, _ in sorted(done)])
+    assert recall_at_k(ivf_ids, true_ids) > 0.85
+    assert recall_at_k(g_ids, true_ids) > 0.85
+    graph_tasks = eng.total_tasks / len(queries)  # actual distance evals
+    assert graph_tasks < 3 * rows.mean()  # same order of work at toy N
+
+
+def test_prefill_to_decode_cache_handoff():
+    """Prefill caches padded to decode size must continue decoding with the
+    same logits as an uninterrupted decode (the KV-link contract)."""
+    import jax
+
+    cfg = get_smoke_config("gemma-7b")
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    B, S, extra = 2, 16, 4
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 500, (B, S + extra)), jnp.int32)
+
+    # path 1: prefill S tokens -> pad -> decode the rest
+    logits, caches = model_zoo.prefill_fn(cfg, params,
+                                          {"tokens": toks[:, :S]})
+    caches = pad_prefill_caches(caches, S + extra)
+    lg1 = logits
+    for i in range(extra):
+        lg1, caches = model_zoo.decode_fn(cfg, params, toks[:, S + i:S + i + 1],
+                                          caches, jnp.int32(S + i))
+
+    # path 2: decode everything from scratch
+    c2 = model_zoo.init_decode_caches(cfg, B, S + extra)
+    lg2 = None
+    for i in range(S + extra):
+        lg2, c2 = model_zoo.decode_fn(cfg, params, toks[:, i:i + 1], c2,
+                                      jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(lg1[:, 0], np.float32),
+                               np.asarray(lg2[:, 0], np.float32),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,99 @@
+"""Trinity §3.3 two-queue scheduler: reservation, EDF ordering, donation,
+adaptive controller direction."""
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import (AdaptiveController, ControllerFeedback,
+                                  TwoQueueScheduler, VectorRequest)
+
+CFG = VectorPoolConfig()
+
+
+def _req(rid, kind, t=0.0, ddl=1.0, est=10.0):
+    return VectorRequest(rid, kind, np.zeros(4, np.float32), t, ddl,
+                         est_extends=est)
+
+
+def test_reservation_floor_respected():
+    s = TwoQueueScheduler(CFG, policy="trinity")
+    s.controller.r = 0.5
+    for i in range(20):
+        s.submit(_req(i, "prefill"))
+    for i in range(20, 40):
+        s.submit(_req(i, "decode"))
+    picked = s.select(10, t_now=0.0)
+    n_pre = sum(1 for r in picked if r.kind == "prefill")
+    assert len(picked) == 10
+    assert n_pre >= 5  # ceil(r·N)
+
+
+def test_unused_prefill_share_donated_to_decode():
+    s = TwoQueueScheduler(CFG, policy="trinity")
+    s.controller.r = 0.9
+    s.submit(_req(0, "prefill"))
+    for i in range(1, 30):
+        s.submit(_req(i, "decode"))
+    picked = s.select(10, t_now=0.0)
+    assert len(picked) == 10
+    assert sum(1 for r in picked if r.kind == "decode") == 9
+
+
+def test_edf_slack_ordering():
+    s = TwoQueueScheduler(CFG, policy="trinity")
+    s.controller.r = 1.0
+    # same deadline, different remaining work => less slack first
+    s.submit(_req(1, "prefill", ddl=1.0, est=5.0))
+    s.submit(_req(2, "prefill", ddl=1.0, est=50.0))
+    s.submit(_req(3, "prefill", ddl=0.5, est=5.0))
+    picked = s.select(2, t_now=0.0)
+    assert [r.rid for r in picked] == [2, 3] or [r.rid for r in picked] == [3, 2]
+
+
+def test_decode_fifo_order_preserved():
+    s = TwoQueueScheduler(CFG, policy="trinity")
+    s.controller.r = 0.0
+    for i in range(5):
+        s.submit(_req(i, "decode", t=i * 0.1))
+    picked = s.select(3, t_now=1.0)
+    assert [r.rid for r in picked] == [0, 1, 2]
+
+
+def test_controller_direction():
+    """u_kv below target => r grows / τ_pre shrinks; decode stalls => r
+    falls (paper §3.3 control law)."""
+    c = AdaptiveController(CFG)
+    r0, tau0 = c.r, c.tau_pre
+    fb = ControllerFeedback(u_kv=0.2, u_kv_target=0.9,
+                            decode_stall_frac=0.0)
+    c.maybe_update(10.0, fb)
+    assert c.r > r0 and c.tau_pre < tau0
+
+    c2 = AdaptiveController(CFG)
+    fb2 = ControllerFeedback(u_kv=0.95, u_kv_target=0.9,
+                             decode_stall_frac=0.9)
+    c2.maybe_update(10.0, fb2)
+    assert c2.r < r0
+
+
+def test_controller_bounds():
+    c = AdaptiveController(CFG)
+    for t in range(1, 200):
+        c.maybe_update(t * 1.0,
+                       ControllerFeedback(u_kv=0.0, decode_stall_frac=0.0))
+    assert c.r <= CFG.r_max + 1e-9
+    c2 = AdaptiveController(CFG)
+    for t in range(1, 200):
+        c2.maybe_update(t * 1.0,
+                        ControllerFeedback(u_kv=1.0, decode_stall_frac=1.0))
+    assert c2.r >= CFG.r_min - 1e-9
+
+
+@pytest.mark.parametrize("policy", ["prefill_first", "decode_first",
+                                    "fifo_shared"])
+def test_baseline_policies_run(policy):
+    s = TwoQueueScheduler(CFG, policy=policy)
+    for i in range(10):
+        s.submit(_req(i, "prefill" if i % 2 else "decode", t=i * 0.01))
+    picked = s.select(6, t_now=1.0)
+    assert len(picked) == 6

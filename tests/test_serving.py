@@ -1,0 +1,142 @@
+"""Cluster-level behaviour: end-to-end completion, SLO metrics, failures,
+stragglers, elastic scaling, KV pager, link utilisation."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import VectorPool
+from repro.serving.cluster import ClusterSim
+from repro.serving.kv_cache import PagedKVManager, kv_bytes_per_token
+from repro.serving.kv_link import KVLink
+from repro.serving.request import GenRequest
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+
+
+@pytest.fixture(scope="module")
+def pool_setup():
+    db, _ = make_dataset(2000, 64, num_clusters=16, num_queries=4, seed=7)
+    graph = make_cagra_graph(db, degree=16, seed=7)
+    cfg = VectorPoolConfig(num_vectors=2000, dim=64, graph_degree=16,
+                           max_requests=16, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=5)
+    return cfg, db, graph
+
+
+def _mk_sim(pool_setup, **kw):
+    cfg, db, graph = pool_setup
+    model_cfg = get_smoke_config("phi3-medium-14b")
+    defaults = dict(placement="disaggregated", policy="trinity",
+                    n_prefill=2, n_decode=2, decode_batch=8)
+    defaults.update(kw)
+    return ClusterSim(model_cfg, cfg, db, graph, **defaults)
+
+
+def _workload(sim, n=24, seed=0, rag_interval=8, max_new=16):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.004))
+        sim.arrive(GenRequest(i, prompt_len=int(rng.integers(64, 512)),
+                              max_new_tokens=max_new, t_arrival=t,
+                              rag_interval=rag_interval))
+    return t
+
+
+def test_all_requests_finish_with_sane_slos(pool_setup):
+    sim = _mk_sim(pool_setup)
+    t_end = _workload(sim) + 5.0
+    sim.run(t_end)
+    s = sim.metrics.summary(t_end)
+    assert s["requests"] == 24
+    assert s["ttft_p50"] > 0 and s["ttft_p95"] >= s["ttft_p50"]
+    assert s["tpot_p50"] > 0
+    assert s["throughput_tok_s"] > 0
+
+
+def test_decode_instance_failure_requeues_and_finishes(pool_setup):
+    sim = _mk_sim(pool_setup, n_decode=3)
+    t_last = _workload(sim, n=16)
+    sim.schedule(t_last * 0.5, sim.kill_decode(0))
+    sim.run(t_last + 10.0)
+    s = sim.metrics.summary(t_last + 10.0)
+    assert s["requests"] == 16
+    assert s["re_prefills"] >= 0  # victims re-prefilled (0 if none in flight)
+    assert not sim.decode_pool[0].health.alive
+
+
+def test_prefill_instance_failure_requeues(pool_setup):
+    sim = _mk_sim(pool_setup, n_prefill=2)
+    t_last = _workload(sim, n=16)
+    sim.schedule(1e-4, sim.kill_prefill(0))
+    sim.run(t_last + 10.0)
+    assert sim.metrics.summary(0)["requests"] == 16
+
+
+def test_straggler_detected_and_routed_around(pool_setup):
+    sim = _mk_sim(pool_setup, n_decode=3)
+    sim.schedule(0.0, sim.set_decode_slowdown(1, 20.0))
+    t_last = _workload(sim, n=24)
+    sim.run(t_last + 20.0)
+    assert sim.metrics.summary(0)["requests"] == 24
+    # dispatcher routed the bulk of the tokens to healthy instances
+    slow = sim.decode_pool[1].tokens_emitted
+    healthy = max(sim.decode_pool[0].tokens_emitted,
+                  sim.decode_pool[2].tokens_emitted)
+    assert healthy > slow
+
+
+def test_vector_pool_elastic_scaling(pool_setup):
+    cfg, db, graph = pool_setup
+    pool = VectorPool(cfg, db, graph, replicas=1, elastic=True,
+                      max_replicas=4, use_pallas=False)
+    # burst: queue depth >> capacity at t=0 triggers scale-up; once the
+    # queue drains the pool scales back down (peak_replicas records it)
+    for i in range(200):
+        pool.submit(VectorRequest(i, "decode", db[i % len(db)], 0.0, 1.0))
+    pool.run_until(2.0)
+    assert pool.peak_replicas > 1
+    assert len(pool.replicas) <= pool.peak_replicas  # scaled back down
+    assert len(pool.metrics.completed) == 200
+
+
+def test_paged_kv_manager_accounting():
+    cfg = get_config("gemma-7b")
+    mgr = PagedKVManager(capacity_bytes=1e9, cfg=cfg, page_tokens=128)
+    assert mgr.capacity_pages > 0
+    assert mgr.allocate(1, 1000)
+    used = mgr.used_pages
+    assert used == mgr.pages_for(1000)
+    # token growth allocates a page only on boundary crossing
+    for _ in range(27):
+        assert mgr.extend(1, 1)
+    assert mgr.used_pages == mgr.pages_for(1027)
+    mgr.free(1)
+    assert mgr.used_pages == 0
+
+
+def test_kv_bytes_per_token_mla_compression():
+    dsv3 = get_config("deepseek-v3-671b")
+    cr = get_config("command-r-plus-104b")
+    # MLA cache per token per layer = 576 elements vs GQA 2·8·128 = 2048
+    assert kv_bytes_per_token(dsv3) < kv_bytes_per_token(cr)
+
+
+def test_kv_link_serialises_and_measures_utilisation():
+    link = KVLink(bandwidth=1e9, window=1.0)
+    t1 = link.transfer(0.0, 5e8)  # 0.5 s
+    t2 = link.transfer(0.0, 5e8)  # queues behind
+    assert abs(t1 - 0.5) < 1e-9 and abs(t2 - 1.0) < 1e-9
+    assert link.utilization(1.0) > 0.95
+    assert link.utilization(10.0) < 0.05
+
+
+@pytest.mark.parametrize("placement", ["coupled", "prefill_coloc",
+                                       "disaggregated"])
+def test_placements_run(pool_setup, placement):
+    sim = _mk_sim(pool_setup, placement=placement)
+    t_last = _workload(sim, n=8, max_new=8)
+    sim.run(t_last + 5.0)
+    assert sim.metrics.summary(0)["requests"] == 8

@@ -1,0 +1,74 @@
+"""Training substrate: loss descent, grad-accum equivalence, optimizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model_zoo
+from repro.training.data import SyntheticLMData
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      global_norm, init_opt_state)
+from repro.training.train_loop import Trainer, make_train_step
+
+
+def test_loss_decreases():
+    cfg = get_smoke_config("qwen1.5-32b")
+    data = SyntheticLMData(cfg.vocab_size, 32, 8, seed=1)
+    tr = Trainer(cfg, data, AdamWConfig(lr=1e-3, warmup_steps=10))
+    hist = tr.run(25, log_every=100, log=None)
+    assert hist[-1] < hist[0] - 0.4
+
+
+def test_grad_accumulation_matches_single_batch():
+    cfg = get_smoke_config("phi3-medium-14b")
+    data = SyntheticLMData(cfg.vocab_size, 16, 8, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+
+    s1 = make_train_step(cfg, AdamWConfig(lr=1e-3), num_microbatches=1)
+    s2 = make_train_step(cfg, AdamWConfig(lr=1e-3), num_microbatches=2)
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, init_opt_state(params), batch)
+    # same data, same update (up to accumulation-order float error)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_adamw_bias_correction_first_step():
+    p = {"w": jnp.ones((4, 4))}
+    g = {"w": jnp.full((4, 4), 0.5)}
+    st = init_opt_state(p)
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, grad_clip=1e9,
+                      warmup_steps=1)
+    p2, st2, m = adamw_update(cfg, p, g, st)
+    # after bias correction the first step is ~lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 1e-2, rtol=1e-3)
+    assert int(st2["step"]) == 1
+    assert float(m["grad_norm"]) > 0
+
+
+def test_grad_clipping():
+    p = {"w": jnp.ones((2,))}
+    g = {"w": jnp.full((2,), 1e6)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0,
+                      warmup_steps=1)
+    st = init_opt_state(p)
+    _, _, m = adamw_update(cfg, p, g, st)
+    assert float(global_norm(g)) > 1e6
+    # update magnitude bounded by lr regardless of raw grad scale
+    # (clip rescales g to unit norm before moments)
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    data = SyntheticLMData(256, 32, 4, seed=9)
+    b1 = data.batch_at(7)
+    b2 = data.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token of the affine recurrence most of the time
+    toks, labels = b1["tokens"], b1["labels"]
+    pred = (31 * toks + 7) % 256
+    agree = np.mean(pred[:, :-1] == labels[:, :-1])
+    assert agree > 0.9

@@ -1,0 +1,62 @@
+"""Graph construction + per-request batched search (baseline engine)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.vector.cagra import search_batch
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import build_knn_graph_exact, make_cagra_graph
+from repro.vector.ref import exact_knn, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    db, queries = make_dataset(3000, 64, num_clusters=24, num_queries=48,
+                               seed=3)
+    graph = make_cagra_graph(db, degree=16, seed=3)
+    true_ids, _ = exact_knn(db, queries, 10)
+    return db, queries, graph, true_ids
+
+
+def test_knn_graph_exact_correctness():
+    db, _ = make_dataset(500, 32, num_clusters=4, num_queries=1)
+    g = build_knn_graph_exact(db, 8)
+    assert g.shape == (500, 8)
+    # no self loops and actual nearest neighbour is the first column
+    assert not np.any(g == np.arange(500)[:, None])
+    d = np.sum((db[:, None, :] - db[g]) ** 2, axis=-1)
+    assert np.all(np.diff(d, axis=1) >= -1e-4)  # sorted by distance
+
+
+def test_graph_fixed_degree_and_bounds(small_index):
+    db, _, graph, _ = small_index
+    assert graph.shape == (3000, 16)
+    assert graph.min() >= 0 and graph.max() < 3000
+
+
+def test_batched_search_recall(small_index):
+    db, queries, graph, true_ids = small_index
+    top_ids, top_dists, extends, iters = search_batch(
+        jnp.asarray(db), jnp.asarray(graph), jnp.asarray(queries),
+        top_m=32, p=2, max_iters=64, num_entries=16)
+    r = recall_at_k(np.asarray(top_ids)[:, :10], true_ids)
+    assert r > 0.85, f"recall@10 {r}"
+    # results are sorted by distance, no duplicate ids among valid entries
+    ids = np.asarray(top_ids)
+    dists = np.asarray(top_dists)
+    for row_i, row_d in zip(ids, dists):
+        valid = row_i >= 0
+        assert np.all(np.diff(row_d[valid]) >= -1e-5)
+        assert len(set(row_i[valid].tolist())) == valid.sum()
+
+
+def test_batched_search_straggler_profile(small_index):
+    """Lockstep batching pays the max extend count — the paper's jitter
+    motivation: max extends should exceed the mean noticeably."""
+    db, queries, graph, _ = small_index
+    _, _, extends, iters = search_batch(
+        jnp.asarray(db), jnp.asarray(graph), jnp.asarray(queries),
+        top_m=32, p=2, max_iters=64, num_entries=16)
+    ext = np.asarray(extends)
+    assert int(iters) == ext.max()
+    assert ext.max() >= 1.2 * ext.mean()
