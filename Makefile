@@ -1,0 +1,18 @@
+# Developer loop targets. The tier-1 fast tier excludes tests marked `slow`
+# (registered in pyproject.toml); run `make verify-full` for the whole suite.
+
+PYTEST := PYTHONPATH=src python -m pytest
+
+.PHONY: verify verify-full bench bench-engine
+
+verify:
+	$(PYTEST) -q -m "not slow"
+
+verify-full:
+	$(PYTEST) -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-engine:
+	PYTHONPATH=src python -m benchmarks.bench_engine_dispatch

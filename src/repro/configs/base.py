@@ -157,6 +157,12 @@ class VectorPoolConfig:
     visited_slots: int = 2048  # open-addressing visited table size per slot
     search_width: int = 1  # initial random entry points multiplier
     top_k: int = 10  # results returned
+    # fused stepping: K extend steps per device dispatch (lax.scan) — the
+    # host syncs completion masks once per chunk instead of every step
+    extend_chunk: int = 4
+    # distance-stage compute path: "slot_gather" (row-wise O(T·d), default)
+    # or "matmul_onehot" (original O(T·R·d) MXU path, kept as oracle)
+    distance_mode: str = "slot_gather"
     # scheduler (per §3.3)
     r_min: float = 0.1
     r_max: float = 0.9

@@ -18,6 +18,23 @@ dists, expanded flags, visited hash table). Every engine iteration:
 
 The whole step is one jitted fixed-shape function (the CUDA-graph analogue)
 — state in, state out, no recompiles.
+
+Fused multi-extend stepping (the dispatch-overhead fix): the host loop used
+to re-cross the host-device boundary every step (one jitted dispatch + a
+``completed`` readback + two scalar syncs per extend). ``extend_multi`` runs
+K = ``VectorPoolConfig.extend_chunk`` extend steps device-side under one
+``lax.scan`` dispatch and returns *stacked* per-step completion masks
+(K, R) and task counts (K,), so the host syncs once per K steps. A request
+completing at sub-step i goes inactive for the remaining K−i−1 sub-steps
+(its slot state is untouched until re-admission), so the fused path is
+bit-identical to K sequential ``extend_step`` calls — asserted in
+tests/test_continuous_batching.py. Admission is likewise batched:
+``admit_many`` seeds a whole scheduler batch in ONE jitted vmapped dispatch
+(batch padded to a power-of-two bucket by replicating row 0 — duplicate
+scatters write identical values) instead of one ``admit`` dispatch per
+request. Parent selection uses ``jax.lax.top_k`` on negated rank (O(M·p))
+instead of a full argsort (O(M log M)); ties break to the lower index in
+both, so selection is unchanged.
 """
 from __future__ import annotations
 
@@ -72,22 +89,42 @@ def init_engine_state(cfg, dtype=jnp.float32) -> EngineState:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("num_entries",), donate_argnums=(0,))
-def admit(state: EngineState, db, slot, qvec, entry_key, num_entries: int = 16):
+def _seed_request(db, qvec, entry_key, *, top_m: int, visited_slots: int,
+                  num_entries: int, metric: str):
+    """Shared seeding body for ``admit`` / ``admit_many``: random entry
+    points + their exact distances (metric-aware), padded to topM, entries
+    inserted into a fresh visited row. Keeping this in one place makes the
+    per-request and batched admission paths equivalent by construction."""
+    N = db.shape[0]
+    entries = jax.random.randint(entry_key, (num_entries,), 0, N)
+    x = db[entries].astype(jnp.float32)
+    q = qvec[None].astype(jnp.float32)
+    if metric == "l2":
+        d = jnp.sum((x - q) ** 2, axis=-1)
+    elif metric == "ip":
+        d = -jnp.sum(x * q, axis=-1)
+    else:
+        raise ValueError(f"unknown metric: {metric!r}")
+    pad = top_m - num_entries
+    ids = jnp.concatenate([entries.astype(jnp.int32),
+                           jnp.full((pad,), -1, jnp.int32)])
+    dists = jnp.concatenate([d, jnp.full((pad,), INF)])
+    visited_row = jnp.full((visited_slots,), -1, jnp.int32)
+    visited_row, _ = _hash_probe(visited_row, entries.astype(jnp.int32))
+    return ids, dists, visited_row
+
+
+@functools.partial(jax.jit, static_argnames=("num_entries", "metric"),
+                   donate_argnums=(0,))
+def admit(state: EngineState, db, slot, qvec, entry_key,
+          num_entries: int = 16, metric: str = "l2"):
     """Place a new request into `slot`: reset state, seed topM with random
     entry points (ids + exact distances), insert entries into visited."""
     M = state.top_ids.shape[1]
     V = state.visited.shape[1]
-    N = db.shape[0]
-    entries = jax.random.randint(entry_key, (num_entries,), 0, N)
-    x = db[entries].astype(jnp.float32)
-    d = jnp.sum((x - qvec[None].astype(jnp.float32)) ** 2, axis=-1)
-    pad = M - num_entries
-    ids = jnp.concatenate([entries.astype(jnp.int32),
-                           jnp.full((pad,), -1, jnp.int32)])
-    dists = jnp.concatenate([d, jnp.full((pad,), INF)])
-    visited_row = jnp.full((V,), -1, jnp.int32)
-    visited_row, _ = _hash_probe(visited_row, entries.astype(jnp.int32))
+    ids, dists, visited_row = _seed_request(
+        db, qvec, entry_key, top_m=M, visited_slots=V,
+        num_entries=num_entries, metric=metric)
     return EngineState(
         query_vecs=state.query_vecs.at[slot].set(qvec),
         top_ids=state.top_ids.at[slot].set(ids),
@@ -96,6 +133,37 @@ def admit(state: EngineState, db, slot, qvec, entry_key, num_entries: int = 16):
         visited=state.visited.at[slot].set(visited_row),
         active=state.active.at[slot].set(True),
         extends=state.extends.at[slot].set(0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_entries", "metric"),
+                   donate_argnums=(0,))
+def admit_many(state: EngineState, db, slots, qvecs, entry_keys,
+               num_entries: int = 16, metric: str = "l2"):
+    """Batched ``admit``: seed a whole scheduler batch in one dispatch.
+
+    slots (B,) int32 · qvecs (B, d) · entry_keys (B, 2) uint32 — one PRNG
+    subkey per request, in the exact order the per-request ``admit`` loop
+    would have consumed them, so results are bit-identical to B sequential
+    ``admit`` calls (asserted in tests; both paths vmap/call the shared
+    ``_seed_request``). Duplicate slots (the host pads batches by
+    replicating row 0) scatter identical values and are safe.
+    """
+    M = state.top_ids.shape[1]
+    V = state.visited.shape[1]
+    seed = functools.partial(_seed_request, top_m=M, visited_slots=V,
+                             num_entries=num_entries, metric=metric)
+    ids, dists, visited_rows = jax.vmap(lambda q, k: seed(db, q, k))(
+        qvecs, entry_keys)
+    B = slots.shape[0]
+    return EngineState(
+        query_vecs=state.query_vecs.at[slots].set(qvecs),
+        top_ids=state.top_ids.at[slots].set(ids),
+        top_dists=state.top_dists.at[slots].set(dists),
+        expanded=state.expanded.at[slots].set(jnp.zeros((B, M), bool)),
+        visited=state.visited.at[slots].set(visited_rows),
+        active=state.active.at[slots].set(True),
+        extends=state.extends.at[slots].set(jnp.zeros((B,), jnp.int32)),
     )
 
 
@@ -113,8 +181,10 @@ def _build_tasks(state: EngineState, graph, p: int):
 
     def per_slot(tid, td, exp, vis, active):
         rank = jnp.where(exp | (tid < 0), INF, td)
-        parent_ix = jnp.argsort(rank)[:p]
-        ok = (jnp.take(rank, parent_ix) < INF) & active
+        # p smallest ranks via top_k on the negation: O(M·p) vs a full
+        # O(M log M) argsort; ties break to the lower index in both.
+        neg_best, parent_ix = jax.lax.top_k(-rank, p)
+        ok = (-neg_best < INF) & active
         parents = jnp.where(ok, jnp.take(tid, parent_ix), -1)
         exp = exp.at[parent_ix].set(exp[parent_ix] | ok)
         nbrs = jnp.where(parents[:, None] >= 0,
@@ -131,11 +201,11 @@ def _build_tasks(state: EngineState, graph, p: int):
     return task_ids, task_slot, expanded, visited, parent_ok
 
 
-@functools.partial(jax.jit, static_argnames=("p", "use_pallas", "task_batch",
-                                             "metric"), donate_argnums=(0,))
-def extend_step(state: EngineState, db, graph, *, p: int, task_batch: int,
-                use_pallas: bool = False, metric: str = "l2"):
-    """One continuous-batching engine iteration.
+def _extend_impl(state: EngineState, db, graph, *, p: int, task_batch: int,
+                 use_pallas: bool = False, metric: str = "l2",
+                 distance_mode: str = "slot_gather"):
+    """One engine iteration (traceable body shared by ``extend_step`` and
+    the fused ``extend_multi`` scan).
 
     Returns (new_state, completed (R,) bool, tasks_emitted scalar)."""
     R, M = state.top_ids.shape
@@ -152,10 +222,16 @@ def extend_step(state: EngineState, db, graph, *, p: int, task_batch: int,
     # ---- stage 4: ONE fixed-shape distance operator ----------------------
     if use_pallas:
         dists = kernel_ops.distance_tasks(db, state.query_vecs, task_ids_p,
-                                          task_slot_p, metric=metric)
-    else:
+                                          task_slot_p, metric=metric,
+                                          mode=distance_mode)
+    elif distance_mode == "matmul_onehot":
+        dists = kernel_ref.distance_tasks_onehot_ref(
+            db, state.query_vecs, task_ids_p, task_slot_p, metric=metric)
+    elif distance_mode == "slot_gather":
         dists = kernel_ref.distance_tasks_ref(db, state.query_vecs, task_ids_p,
                                               task_slot_p, metric=metric)
+    else:
+        raise ValueError(f"unknown distance mode: {distance_mode!r}")
     dists = dists[:n_emit].reshape(R, p * D)
     cand_ids = task_ids.reshape(R, p * D)
 
@@ -175,6 +251,46 @@ def extend_step(state: EngineState, db, graph, *, p: int, task_batch: int,
     return new_state, completed, tasks_emitted
 
 
+@functools.partial(jax.jit, static_argnames=("p", "use_pallas", "task_batch",
+                                             "metric", "distance_mode"),
+                   donate_argnums=(0,))
+def extend_step(state: EngineState, db, graph, *, p: int, task_batch: int,
+                use_pallas: bool = False, metric: str = "l2",
+                distance_mode: str = "slot_gather"):
+    """One continuous-batching engine iteration.
+
+    Returns (new_state, completed (R,) bool, tasks_emitted scalar)."""
+    return _extend_impl(state, db, graph, p=p, task_batch=task_batch,
+                        use_pallas=use_pallas, metric=metric,
+                        distance_mode=distance_mode)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "p", "use_pallas",
+                                             "task_batch", "metric",
+                                             "distance_mode"),
+                   donate_argnums=(0,))
+def extend_multi(state: EngineState, db, graph, *, num_steps: int, p: int,
+                 task_batch: int, use_pallas: bool = False,
+                 metric: str = "l2", distance_mode: str = "slot_gather"):
+    """K fused engine iterations in ONE dispatch (``lax.scan`` over
+    ``_extend_impl``). Requests that complete at sub-step i stay inactive
+    (and their slot state untouched) for the remaining sub-steps, so the
+    result is bit-identical to K sequential ``extend_step`` calls.
+
+    Returns (new_state, completed (K, R) bool, tasks_emitted (K,) int32) —
+    stacked device arrays; the host syncs once per K steps."""
+
+    def body(st, _):
+        st, completed, tasks = _extend_impl(
+            st, db, graph, p=p, task_batch=task_batch, use_pallas=use_pallas,
+            metric=metric, distance_mode=distance_mode)
+        return st, (completed, tasks)
+
+    state, (completed_k, tasks_k) = jax.lax.scan(
+        body, state, None, length=num_steps)
+    return state, completed_k, tasks_k
+
+
 # ---------------------------------------------------------------------------
 # host-side engine wrapper (slot freelist, admission, completion collection)
 # ---------------------------------------------------------------------------
@@ -185,6 +301,13 @@ class ContinuousBatchingEngine:
 
     ``use_pallas=None`` auto-selects: Pallas kernel on TPU, jnp oracle on
     CPU (identical results — asserted in tests/test_continuous_batching).
+
+    Hot-path dispatch discipline: ``num_active`` is tracked host-side (the
+    freelist/slot-map already knows it — no device readback), admissions go
+    through one vmapped ``admit_many`` dispatch per scheduler batch
+    (``admit_batch``), and ``step_multi`` fuses K extend steps into one
+    device dispatch with a single host sync for the stacked completion
+    masks + task counts.
     """
 
     def __init__(self, cfg, db: np.ndarray, graph: np.ndarray,
@@ -197,6 +320,8 @@ class ContinuousBatchingEngine:
         self.slot_request = {}  # slot -> request id
         self.use_pallas = (jax.default_backend() == "tpu"
                            if use_pallas is None else use_pallas)
+        self.distance_mode = cfg.distance_mode
+        self.extend_chunk = max(1, cfg.extend_chunk)
         self._key = jax.random.PRNGKey(seed)
         # metrics
         self.total_tasks = 0
@@ -206,7 +331,8 @@ class ContinuousBatchingEngine:
 
     @property
     def num_active(self) -> int:
-        return int(jnp.sum(self.state.active))
+        # the host already knows which slots are in flight — no device sync
+        return len(self.slot_request)
 
     @property
     def num_free(self) -> int:
@@ -216,47 +342,109 @@ class ContinuousBatchingEngine:
         slot = self.free_slots.pop()
         self._key, sub = jax.random.split(self._key)
         self.state = admit(self.state, self.db, slot, jnp.asarray(qvec), sub,
-                           num_entries=min(16, self.cfg.top_m // 2))
+                           num_entries=min(16, self.cfg.top_m // 2),
+                           metric=self.cfg.metric)
         self.slot_request[slot] = request_id
         return slot
+
+    def admit_batch(self, requests) -> List[int]:
+        """Admit ``[(request_id, qvec), ...]`` in ONE jitted dispatch.
+
+        Consumes PRNG subkeys in the same order as per-request ``admit``
+        calls would, and the batch is padded to a power-of-two bucket (by
+        replicating row 0 — duplicate scatters write identical values) so
+        only O(log max_requests) distinct shapes ever compile. Results are
+        bit-identical to sequential ``admit`` calls."""
+        if not requests:
+            return []
+        B = len(requests)
+        assert B <= len(self.free_slots), (B, len(self.free_slots))
+        slots = [self.free_slots.pop() for _ in range(B)]
+        subs = []
+        for _ in range(B):
+            self._key, sub = jax.random.split(self._key)
+            subs.append(sub)
+        b_pad = 1 << (B - 1).bit_length()
+        pad = b_pad - B
+        slots_p = np.asarray(slots + slots[:1] * pad, np.int32)
+        qvecs = np.stack([np.asarray(q, np.float32) for _, q in requests])
+        qvecs_p = np.concatenate([qvecs] + [qvecs[:1]] * pad) if pad else qvecs
+        keys_p = jnp.stack(subs + subs[:1] * pad)
+        self.state = admit_many(self.state, self.db, jnp.asarray(slots_p),
+                                jnp.asarray(qvecs_p), keys_p,
+                                num_entries=min(16, self.cfg.top_m // 2),
+                                metric=self.cfg.metric)
+        for slot, (rid, _) in zip(slots, requests):
+            self.slot_request[slot] = rid
+        return slots
+
+    def step_multi(self, num_steps: Optional[int] = None):
+        """K fused extends over all active slots — one dispatch, one sync.
+
+        Returns (completions, tasks_per_step (K,) np.int32); completions
+        are (request_id, topk_ids, topk_dists, extends_used, substep) with
+        ``substep`` ∈ [0, K) the extend at which the request converged (for
+        exact completion-time attribution in the pool)."""
+        k = self.extend_chunk if num_steps is None else num_steps
+        live = self.num_active
+        self.state, completed_k, tasks_k = extend_multi(
+            self.state, self.db, self.graph, num_steps=k,
+            p=self.cfg.parents_per_step, task_batch=self.cfg.task_batch,
+            use_pallas=self.use_pallas, metric=self.cfg.metric,
+            distance_mode=self.distance_mode)
+        # the ONE host-device sync for this dispatch
+        completed_k, tasks_k = jax.device_get((completed_k, tasks_k))
+        self.total_tasks += int(tasks_k.sum())
+        self.total_capacity += k * self.cfg.task_batch
+        self.steps += k
+        # per-substep live-slot accounting, derived host-side: completions
+        # are the only active→inactive transitions and no admissions happen
+        # mid-chunk
+        per_step_completions = completed_k.sum(axis=1)
+        for i in range(k):
+            self.total_live_slots += live
+            live -= int(per_step_completions[i])
+
+        out = []
+        if completed_k.any():
+            top_ids = np.asarray(self.state.top_ids)
+            top_dists = np.asarray(self.state.top_dists)
+            extends = np.asarray(self.state.extends)
+            kk = self.cfg.top_k
+            for i in range(k):
+                for slot in np.nonzero(completed_k[i])[0]:
+                    rid = self.slot_request.pop(int(slot))
+                    out.append((rid, top_ids[slot, :kk].copy(),
+                                top_dists[slot, :kk].copy(),
+                                int(extends[slot]), i))
+                    self.free_slots.append(int(slot))
+        return out, tasks_k
 
     def step(self) -> Tuple[List[Tuple[int, np.ndarray, np.ndarray, int]], int]:
         """One extend over all active slots.
 
         Returns (completions, tasks_emitted); completions are
         (request_id, topk_ids, topk_dists, extends_used)."""
-        self.total_live_slots += self.num_active
-        self.state, completed, tasks = extend_step(
-            self.state, self.db, self.graph, p=self.cfg.parents_per_step,
-            task_batch=self.cfg.task_batch, use_pallas=self.use_pallas,
-            metric=self.cfg.metric)
-        completed = np.asarray(completed)
-        tasks = int(tasks)
-        self.total_tasks += tasks
-        self.total_capacity += self.cfg.task_batch
-        self.steps += 1
-
-        out = []
-        if completed.any():
-            top_ids = np.asarray(self.state.top_ids)
-            top_dists = np.asarray(self.state.top_dists)
-            extends = np.asarray(self.state.extends)
-            k = self.cfg.top_k
-            for slot in np.nonzero(completed)[0]:
-                rid = self.slot_request.pop(int(slot))
-                out.append((rid, top_ids[slot, :k].copy(),
-                            top_dists[slot, :k].copy(), int(extends[slot])))
-                self.free_slots.append(int(slot))
-        return out, tasks
+        comps, tasks_k = self.step_multi(1)
+        return [(rid, ids, dists, ext) for rid, ids, dists, ext, _ in comps], \
+            int(tasks_k[0])
 
     def run_to_completion(self, max_steps: int = 256):
-        """Drain all active requests (used by tests/benchmarks)."""
+        """Drain all active requests (used by tests/benchmarks).
+
+        Chunk sizes are restricted to {1, extend_chunk} so only two scan
+        shapes ever compile (an arbitrary tail chunk would trigger a fresh
+        XLA compile of the whole K-step program)."""
         done = []
-        for _ in range(max_steps):
+        steps = 0
+        while steps < max_steps:
             if self.num_active == 0:
                 break
-            c, _ = self.step()
-            done.extend(c)
+            chunk = self.extend_chunk \
+                if max_steps - steps >= self.extend_chunk else 1
+            c, _ = self.step_multi(chunk)
+            done.extend((rid, ids, dists, ext) for rid, ids, dists, ext, _ in c)
+            steps += chunk
         return done
 
     @property

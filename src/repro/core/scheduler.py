@@ -35,7 +35,11 @@ class VectorRequest:
 
     @property
     def wait(self) -> float:
-        return (self.t_admitted or self.t_arrival) - self.t_arrival
+        # explicit None check: t_admitted == 0.0 is a valid admission time
+        # and must not fall back to t_arrival (falsy-zero bug)
+        if self.t_admitted is None:
+            return 0.0
+        return self.t_admitted - self.t_arrival
 
 
 class PrefillQueue:

@@ -9,10 +9,23 @@ shape → no recompiles).
 TPU adaptation (DESIGN.md §3): the GPU warp-gather becomes a *burst DMA
 gather* — task db-row ids arrive via scalar prefetch (SMEM), each grid step
 issues TASK_BLOCK row copies HBM→VMEM back-to-back on per-row DMA
-semaphores, then waits; distances are computed with an MXU matmul against
-the resident query block plus a one-hot slot-select (VPU). Arithmetic
-intensity per task ≈ d MACs / d·4 bytes ⇒ memory-bound, matching the
-paper's roofline placement of ANN next to decode.
+semaphores, then waits. Two compute paths, selected by ``mode`` (the
+engine's ``VectorPoolConfig.distance_mode`` knob):
+
+  ``matmul_onehot`` (the original path, kept as oracle) — an MXU matmul of
+  the gathered block against the resident (R, d) query block followed by a
+  one-hot slot-select (VPU). Does O(TB·R·d) MACs to use O(TB·d) of them:
+  R× wasted MXU work per task.
+
+  ``slot_gather`` (default) — the owning query row is gathered per task
+  from the VMEM-resident (R, d) query block via a local row copy
+  (task_slot also arrives via scalar prefetch; no extra HBM traffic), and
+  the distance is a row-wise VPU reduction over the two gathered blocks.
+  O(TB·d) work total; no (TB, R) intermediate, no one-hot select.
+
+Arithmetic intensity per task ≈ d MACs / d·4 bytes ⇒ memory-bound either
+way, matching the paper's roofline placement of ANN next to decode — which
+is exactly why burning R× MXU FLOPs buys nothing and ``slot_gather`` wins.
 """
 from __future__ import annotations
 
@@ -86,10 +99,79 @@ def _distance_kernel(task_ids_sref, db_ref, queries_ref, qnorm_ref,
     out_ref[...] = jnp.where(ids_ref[...] >= 0, dist, DUMMY_DIST)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "task_block", "interpret"))
+def _distance_kernel_gather(task_ids_sref, task_slot_sref, db_ref,
+                            queries_ref, ids_ref, out_ref, xgather, qgather,
+                            xsems, qsems, *, task_block: int, metric: str):
+    """Slot-gather path: one grid step = one task block, O(TB·d) work.
+
+    task_ids_sref:  (T,) int32 in SMEM (scalar prefetch, db DMA addressing)
+    task_slot_sref: (T,) int32 in SMEM (scalar prefetch, query row select)
+    db_ref:         (N, d) in ANY (stays in HBM; rows DMA'd on demand)
+    queries_ref:    (R, d) VMEM — resident query block (fits easily; no
+                    per-task HBM traffic for queries, the row copy below is
+                    a local VMEM→VMEM DMA)
+    ids_ref:        (task_block,) VMEM — same ids, for dummy masking
+    out_ref:        (task_block,) VMEM distances
+    xgather/qgather: (task_block, d) VMEM scratch (db rows / query rows)
+    xsems/qsems:    (task_block,) DMA semaphores
+    """
+    blk = pl.program_id(0)
+    base = blk * task_block
+
+    # ---- burst gather: db row from HBM + owning query row from the -------
+    # resident VMEM block (dummies clamp to row/slot 0, masked at the end)
+    def start(i, carry):
+        row = jnp.maximum(task_ids_sref[base + i], 0)
+        pltpu.make_async_copy(
+            db_ref.at[pl.ds(row, 1)], xgather.at[pl.ds(i, 1)], xsems.at[i]
+        ).start()
+        slot = jnp.maximum(task_slot_sref[base + i], 0)
+        pltpu.make_async_copy(
+            queries_ref.at[pl.ds(slot, 1)], qgather.at[pl.ds(i, 1)],
+            qsems.at[i]
+        ).start()
+        return carry
+
+    jax.lax.fori_loop(0, task_block, start, 0)
+
+    def wait(i, carry):
+        row = jnp.maximum(task_ids_sref[base + i], 0)
+        pltpu.make_async_copy(
+            db_ref.at[pl.ds(row, 1)], xgather.at[pl.ds(i, 1)], xsems.at[i]
+        ).wait()
+        slot = jnp.maximum(task_slot_sref[base + i], 0)
+        pltpu.make_async_copy(
+            queries_ref.at[pl.ds(slot, 1)], qgather.at[pl.ds(i, 1)],
+            qsems.at[i]
+        ).wait()
+        return carry
+
+    jax.lax.fori_loop(0, task_block, wait, 0)
+
+    # ---- distances: row-wise VPU reduction, no (TB, R) intermediate ------
+    x = xgather[...].astype(jnp.float32)  # (TB, d)
+    q = qgather[...].astype(jnp.float32)  # (TB, d)
+    if metric == "l2":
+        diff = x - q
+        dist = jnp.sum(diff * diff, axis=1)
+    elif metric == "ip":
+        dist = -jnp.sum(x * q, axis=1)
+    else:
+        raise ValueError(metric)
+
+    out_ref[...] = jnp.where(ids_ref[...] >= 0, dist, DUMMY_DIST)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "task_block",
+                                             "interpret", "mode"))
 def distance_tasks(db, queries, task_ids, task_slot, *, metric: str = "l2",
-                   task_block: int = 256, interpret: bool = True):
-    """Fixed-shape distance stage. Oracle: ``ref.distance_tasks_ref``.
+                   task_block: int = 256, interpret: bool = True,
+                   mode: str = "slot_gather"):
+    """Fixed-shape distance stage.
+
+    ``mode="slot_gather"`` (default): row-wise O(T·d) path; oracle is
+    ``ref.distance_tasks_ref``. ``mode="matmul_onehot"``: the original
+    O(T·R·d) MXU path, kept as oracle (``ref.distance_tasks_onehot_ref``).
 
     db (N,d) · queries (R,d) · task_ids/task_slot (T,) int32 with
     T % task_block == 0 (the engine pads with dummies; id −1 = dummy).
@@ -97,6 +179,36 @@ def distance_tasks(db, queries, task_ids, task_slot, *, metric: str = "l2",
     """
     T = task_ids.shape[0]
     assert T % task_block == 0, (T, task_block)
+
+    if mode == "slot_gather":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # task_ids + task_slot (SMEM addressing)
+            grid=(T // task_block,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pl.ANY),  # db stays in HBM
+                pl.BlockSpec(queries.shape, lambda i, *_: (0, 0)),  # resident
+                pl.BlockSpec((task_block,), lambda i, *_: (i,)),  # ids (mask)
+            ],
+            out_specs=pl.BlockSpec((task_block,), lambda i, *_: (i,)),
+            scratch_shapes=[
+                pltpu.VMEM((task_block, db.shape[1]), jnp.float32),
+                pltpu.VMEM((task_block, db.shape[1]), jnp.float32),
+                pltpu.SemaphoreType.DMA((task_block,)),
+                pltpu.SemaphoreType.DMA((task_block,)),
+            ],
+        )
+        kernel = functools.partial(_distance_kernel_gather,
+                                   task_block=task_block, metric=metric)
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+            interpret=interpret,
+        )(task_ids, task_slot, db.astype(jnp.float32),
+          queries.astype(jnp.float32), task_ids)
+
+    if mode != "matmul_onehot":
+        raise ValueError(f"unknown distance mode: {mode!r}")
     qnorm = jnp.sum(queries.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1,R)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -18,10 +18,10 @@ def _interpret() -> bool:
 
 
 def distance_tasks(db, queries, task_ids, task_slot, metric: str = "l2",
-                   task_block: int = 256):
+                   task_block: int = 256, mode: str = "slot_gather"):
     return _dist.distance_tasks(db, queries, task_ids, task_slot,
                                 metric=metric, task_block=task_block,
-                                interpret=_interpret())
+                                interpret=_interpret(), mode=mode)
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,

@@ -8,7 +8,10 @@ DUMMY_DIST = 1e30
 
 
 def distance_tasks_ref(db, queries, task_ids, task_slot, metric: str = "l2"):
-    """Oracle for the Trinity global distance stage.
+    """Oracle for the Trinity global distance stage (slot-gather form).
+
+    Gathers the owning query row per task and reduces row-wise — O(T·d)
+    work, the same dataflow as the ``slot_gather`` Pallas kernel.
 
     db:        (N, d)  database vectors
     queries:   (R, d)  per-request-slot query vectors
@@ -24,6 +27,34 @@ def distance_tasks_ref(db, queries, task_ids, task_slot, metric: str = "l2"):
         dist = jnp.sum((x - q) ** 2, axis=-1)
     elif metric == "ip":
         dist = -jnp.sum(x * q, axis=-1)
+    else:
+        raise ValueError(metric)
+    return jnp.where(valid, dist, DUMMY_DIST)
+
+
+def distance_tasks_onehot_ref(db, queries, task_ids, task_slot,
+                              metric: str = "l2"):
+    """Oracle for the original matmul+one-hot distance stage.
+
+    Computes the full (T, R) task-by-slot Gram matrix then one-hot-selects
+    the owning column — O(T·R·d) work, kept as the numerical oracle for the
+    ``matmul_onehot`` kernel path (the slot-gather path must agree to 1e-4).
+    """
+    valid = task_ids >= 0
+    ids = jnp.maximum(task_ids, 0)
+    x = db[ids].astype(jnp.float32)  # (T, d)
+    q = queries.astype(jnp.float32)  # (R, d)
+    xq = x @ q.T  # (T, R)
+    R = q.shape[0]
+    onehot = task_slot[:, None] == jnp.arange(R, dtype=task_slot.dtype)[None]
+    sel_xq = jnp.sum(jnp.where(onehot, xq, 0.0), axis=1)
+    if metric == "l2":
+        xnorm = jnp.sum(x * x, axis=1)
+        qnorm = jnp.sum(q * q, axis=1)
+        sel_qn = jnp.sum(jnp.where(onehot, qnorm[None, :], 0.0), axis=1)
+        dist = xnorm - 2.0 * sel_xq + sel_qn
+    elif metric == "ip":
+        dist = -sel_xq
     else:
         raise ValueError(metric)
     return jnp.where(valid, dist, DUMMY_DIST)

@@ -36,61 +36,73 @@ def _hash_probe(visited, ids, num_probes: int = 4):
     """Lookup+insert ids into per-query open-addressing tables.
 
     visited: (V,) int32; ids: (C,) int32 (-1 = inactive).
-    Returns (new_visited, was_seen (C,) bool). Sequential over C (candidate
-    lists are short); lax.fori_loop keeps it jittable.
+    Returns (new_visited, was_seen (C,) bool).
+
+    Fully vectorized (the sequential fori/cond chain dominated the CPU
+    extend step): all C probe windows are gathered at once; "seen" =
+    present in the table OR duplicate of an earlier candidate in the same
+    batch; first occurrences insert into the first empty slot of their
+    window, with slot conflicts resolved to the lowest candidate index via
+    a commutative scatter-min (deterministic on every backend). A losing
+    candidate simply stays uninserted — the same recompute-not-wrong
+    degradation as a full probe window in the sequential version.
     """
     V = visited.shape[0]
+    C = ids.shape[0]
+    valid = ids >= 0
+    probe = jnp.arange(num_probes, dtype=jnp.uint32)
+    slots = ((ids.astype(jnp.uint32)[:, None] * HASH_MULT + probe[None, :])
+             % jnp.uint32(V)).astype(jnp.int32)  # (C, P)
+    cur = visited[slots]  # (C, P)
+    hit_table = jnp.any(cur == ids[:, None], axis=1)
+    # duplicate of an earlier candidate in this batch (within-batch dedup)
+    dup_earlier = jnp.any(
+        jnp.tril(ids[None, :] == ids[:, None], k=-1), axis=1)
+    seen = (hit_table | dup_earlier) & valid
 
-    def body(i, carry):
-        vis, seen = carry
-        cid = ids[i]
-
-        def probe(j, st):
-            vis_, seen_i, inserted = st
-            slot = ((cid.astype(jnp.uint32) * HASH_MULT
-                     + j.astype(jnp.uint32)) % jnp.uint32(V)).astype(jnp.int32)
-            cur = vis_[slot]
-            hit = cur == cid
-            empty = cur == -1
-            do_insert = empty & (~inserted) & (~hit)
-            vis_ = jax.lax.cond(do_insert,
-                                lambda v: v.at[slot].set(cid),
-                                lambda v: v, vis_)
-            return vis_, seen_i | hit, inserted | do_insert | hit
-
-        vis, seen_i, _ = jax.lax.fori_loop(
-            0, num_probes, probe, (vis, False, False))
-        active = cid >= 0
-        return vis, seen.at[i].set(seen_i & active)
-
-    seen0 = jnp.zeros(ids.shape, bool)
-    return jax.lax.fori_loop(0, ids.shape[0], body,
-                             (visited, seen0))
+    # insert first occurrences at their first empty probe slot
+    empty = cur == -1
+    want = valid & ~seen & jnp.any(empty, axis=1)
+    first_empty = jnp.argmax(empty, axis=1)
+    slot_of = jnp.take_along_axis(slots, first_empty[:, None], axis=1)[:, 0]
+    proposed = jnp.where(want, slot_of, V)  # V = out of range -> dropped
+    arange_c = jnp.arange(C, dtype=jnp.int32)
+    winner = jnp.full((V,), C, jnp.int32).at[proposed].min(
+        arange_c, mode="drop")
+    ins = want & (winner[slot_of] == arange_c)
+    new_visited = visited.at[jnp.where(ins, slot_of, V)].set(
+        ids, mode="drop")
+    return new_visited, seen
 
 
 def _merge_topm(top_ids, top_dists, expanded, cand_ids, cand_dists):
     """Merge candidates into topM with exact id-dedup (existing entry wins).
 
-    top_*: (M,) state; cand_*: (C,). Returns new (ids, dists, expanded)."""
+    top_*: (M,) state; cand_*: (C,). Returns new (ids, dists, expanded).
+
+    Dedup is two vectorized membership masks (candidate-vs-topM and
+    candidate-vs-earlier-candidate) instead of a full (id, is_new) key
+    sort, and the final rank is ONE ``top_k`` over the M+C pool — O(M·C)
+    compares + O((M+C)·M) selection vs two O((M+C) log(M+C)) sorts.
+    Distances are pure functions of the id (exact distances to the query),
+    so dropping a duplicate candidate is exactly 'existing entry wins'.
+    """
     M = top_ids.shape[0]
-    ids = jnp.concatenate([top_ids, cand_ids])
-    dists = jnp.concatenate([top_dists, cand_dists])
-    exp = jnp.concatenate([expanded, jnp.zeros(cand_ids.shape, bool)])
-    is_new = jnp.concatenate([jnp.zeros(M, bool), jnp.ones(cand_ids.shape, bool)])
+    C = cand_ids.shape[0]
+    valid_c = cand_ids >= 0
+    # candidate already in topM, or duplicates an earlier candidate
+    dup_top = jnp.any(cand_ids[:, None] == top_ids[None, :], axis=1)
+    dup_prev = jnp.any(
+        jnp.tril(cand_ids[None, :] == cand_ids[:, None], k=-1), axis=1)
+    keep = valid_c & ~dup_top & ~dup_prev
+    ids = jnp.concatenate([top_ids, jnp.where(keep, cand_ids, -1)])
+    dists = jnp.concatenate([top_dists, jnp.where(keep, cand_dists, INF)])
+    exp = jnp.concatenate([expanded, jnp.zeros((C,), bool)])
 
-    # sort by (id, is_new): equal ids adjacent, existing copy first
-    # (int32-safe: requires N < 2**30, true for every pool config)
-    key = ids * 2 + is_new.astype(jnp.int32)
-    key = jnp.where(ids < 0, jnp.iinfo(jnp.int32).max, key)  # empties last
-    order = jnp.argsort(key)
-    ids_s, dists_s, exp_s = ids[order], dists[order], exp[order]
-    dup = jnp.concatenate([jnp.array([False]), ids_s[1:] == ids_s[:-1]])
-    dists_s = jnp.where(dup, INF, dists_s)
-    ids_s = jnp.where(dup, -1, ids_s)
-
-    # final rank by distance, keep M best
-    order2 = jnp.argsort(dists_s)
-    return ids_s[order2][:M], dists_s[order2][:M], exp_s[order2][:M]
+    # keep the M smallest distances: top_k on the negation, ties to the
+    # lower index (existing entries come first in the concat)
+    neg_best, order = jax.lax.top_k(-dists, M)
+    return ids[order], -neg_best, exp[order]
 
 
 def _extend_one(db, graph, query, state_q, p: int):
@@ -99,10 +111,12 @@ def _extend_one(db, graph, query, state_q, p: int):
     M = top_ids.shape[0]
     D = graph.shape[1]
 
-    # pick ≤ p best unexpanded parents
+    # pick ≤ p best unexpanded parents: top_k on the negated rank is
+    # O(M·p) vs a full O(M log M) argsort (ties break to the lower index
+    # in both, so selection is unchanged)
     cand_rank = jnp.where(expanded | (top_ids < 0), INF, top_dists)
-    parent_ix = jnp.argsort(cand_rank)[:p]  # (p,)
-    parent_ok = jnp.take(cand_rank, parent_ix) < INF
+    neg_best, parent_ix = jax.lax.top_k(-cand_rank, p)  # (p,)
+    parent_ok = -neg_best < INF
     parents = jnp.where(parent_ok, jnp.take(top_ids, parent_ix), -1)
     expanded = expanded.at[parent_ix].set(expanded[parent_ix] | parent_ok)
 

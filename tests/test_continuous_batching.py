@@ -90,6 +90,129 @@ def test_slots_recycled_and_new_arrivals_join_next_batch(setup):
     assert any(rid == 999 for rid, *_ in out)
 
 
+def test_admit_batch_matches_sequential_admits(setup):
+    """admit_many (one vmapped dispatch) must be bit-identical to the
+    per-request admit loop it replaces — including PRNG key order."""
+    cfg, db, graph, queries, _ = setup
+    e_seq = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e_bat = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    for i in range(7):  # odd count exercises the power-of-two padding
+        e_seq.admit(i, queries[i])
+    e_bat.admit_batch([(i, queries[i]) for i in range(7)])
+    for field in ("query_vecs", "top_ids", "top_dists", "expanded",
+                  "visited", "active", "extends"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(e_seq.state, field)),
+            np.asarray(getattr(e_bat.state, field)), err_msg=field)
+    assert e_seq.free_slots == e_bat.free_slots
+    assert e_seq.slot_request == e_bat.slot_request
+
+
+def test_fused_multi_step_matches_raw_extend_step(setup):
+    """extend_multi(K) must be bit-identical to K calls of the raw jitted
+    extend_step (NOT routed through step()/step_multi, which themselves use
+    the scan) — pins the scan-vs-plain-dispatch equivalence."""
+    import jax
+
+    from repro.core.continuous_batching import extend_multi, extend_step
+
+    cfg, db, graph, queries, _ = setup
+    e_raw = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=4)
+    e_fus = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=4)
+    n = 10
+    e_raw.admit_batch([(i, queries[i]) for i in range(n)])
+    e_fus.admit_batch([(i, queries[i]) for i in range(n)])
+
+    K = 6
+    kw = dict(p=cfg.parents_per_step, task_batch=cfg.task_batch,
+              use_pallas=False, metric=cfg.metric,
+              distance_mode=cfg.distance_mode)
+    state = e_raw.state
+    raw_completed, raw_tasks = [], []
+    for _ in range(K):
+        state, completed, tasks = extend_step(state, e_raw.db, e_raw.graph,
+                                              **kw)
+        raw_completed.append(np.asarray(completed))
+        raw_tasks.append(int(tasks))
+    fus_state, completed_k, tasks_k = extend_multi(
+        e_fus.state, e_fus.db, e_fus.graph, num_steps=K, **kw)
+    np.testing.assert_array_equal(np.stack(raw_completed),
+                                  np.asarray(completed_k))
+    np.testing.assert_array_equal(np.asarray(raw_tasks),
+                                  np.asarray(tasks_k))
+    for f_raw, f_fus in zip(jax.tree_util.tree_leaves(state),
+                            jax.tree_util.tree_leaves(fus_state)):
+        np.testing.assert_array_equal(np.asarray(f_raw), np.asarray(f_fus))
+
+
+def test_fused_multi_step_matches_sequential_steps(setup):
+    """step_multi(K) — one lax.scan dispatch — must produce bit-identical
+    state and top-k results to K sequential step() calls, with completions
+    attributed to the correct sub-step."""
+    cfg, db, graph, queries, _ = setup
+    e_seq = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=4)
+    e_fus = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=4)
+    n = 10
+    e_seq.admit_batch([(i, queries[i]) for i in range(n)])
+    e_fus.admit_batch([(i, queries[i]) for i in range(n)])
+
+    K = 6
+    seq_comps = []  # (rid, ids, dists, ext, substep)
+    for i in range(K):
+        comps, tasks = e_seq.step()
+        seq_comps.extend((rid, ids, d, ext, i) for rid, ids, d, ext in comps)
+    fus_comps, tasks_k = e_fus.step_multi(K)
+    assert tasks_k.shape == (K,)
+
+    for field in ("top_ids", "top_dists", "expanded", "visited", "active",
+                  "extends"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(e_seq.state, field)),
+            np.asarray(getattr(e_fus.state, field)), err_msg=field)
+
+    seq_by_rid = {c[0]: c for c in seq_comps}
+    fus_by_rid = {c[0]: c for c in fus_comps}
+    assert seq_by_rid.keys() == fus_by_rid.keys()
+    for rid in seq_by_rid:
+        _, ids_s, d_s, ext_s, sub_s = seq_by_rid[rid]
+        _, ids_f, d_f, ext_f, sub_f = fus_by_rid[rid]
+        np.testing.assert_array_equal(ids_s, ids_f)  # bit-identical top-k
+        np.testing.assert_array_equal(d_s, d_f)
+        assert ext_s == ext_f and sub_s == sub_f
+
+    # drains agree too (covers slot recycling after a fused chunk)
+    r_seq = {rid: ids for rid, ids, _, _ in e_seq.run_to_completion()}
+    r_fus = {rid: ids for rid, ids, _, _ in e_fus.run_to_completion()}
+    assert r_seq.keys() == r_fus.keys()
+    for rid in r_seq:
+        np.testing.assert_array_equal(r_seq[rid], r_fus[rid])
+
+
+def test_distance_modes_agree_through_engine(setup):
+    """The slot-gather Pallas path and the matmul-onehot oracle path must
+    yield equivalent search results end-to-end. The two formulas only
+    agree to ~1e-4 in float32, so a distance tie at a selection boundary
+    may legitimately swap ids — compare with tolerance, not bit-equality."""
+    cfg, db, graph, queries, _ = setup
+    import dataclasses
+    cfg_oh = dataclasses.replace(cfg, distance_mode="matmul_onehot")
+    e_sg = ContinuousBatchingEngine(cfg, db, graph, use_pallas=True, seed=11)
+    e_oh = ContinuousBatchingEngine(cfg_oh, db, graph, use_pallas=True,
+                                    seed=11)
+    for i in range(6):
+        e_sg.admit(i, queries[i])
+        e_oh.admit(i, queries[i])
+    r1 = {rid: (ids, d) for rid, ids, d, _ in e_sg.run_to_completion()}
+    r2 = {rid: (ids, d) for rid, ids, d, _ in e_oh.run_to_completion()}
+    assert r1.keys() == r2.keys()
+    for k in r1:
+        ids1, d1 = r1[k]
+        ids2, d2 = r2[k]
+        overlap = len(set(ids1.tolist()) & set(ids2.tolist())) / len(ids1)
+        assert overlap >= 0.9, (k, ids1, ids2)
+        np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-3)
+
+
 def test_early_exit_no_infinite_loop(setup):
     cfg, db, graph, queries, _ = setup
     eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False)

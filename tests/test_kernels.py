@@ -19,33 +19,58 @@ def _rand(shape, dtype, k):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("mode", ["slot_gather", "matmul_onehot"])
 @pytest.mark.parametrize("metric", ["l2", "ip"])
 @pytest.mark.parametrize("N,d,R,T", [
     (500, 128, 8, 256), (1000, 64, 16, 512), (256, 256, 4, 256),
 ])
-def test_distance_tasks_matches_oracle(metric, N, d, R, T):
+def test_distance_tasks_matches_oracle(mode, metric, N, d, R, T):
     db = _rand((N, d), jnp.float32, 1)
     queries = _rand((R, d), jnp.float32, 2)
     task_ids = jax.random.randint(jax.random.fold_in(KEY, 3), (T,), 0, N)
     task_ids = task_ids.at[::5].set(-1)  # masked dummies
     task_slot = jax.random.randint(jax.random.fold_in(KEY, 4), (T,), 0, R)
-    out = ops.distance_tasks(db, queries, task_ids, task_slot, metric=metric)
+    out = ops.distance_tasks(db, queries, task_ids, task_slot, metric=metric,
+                             mode=mode)
     want = ref.distance_tasks_ref(db, queries, task_ids, task_slot, metric=metric)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
 
-def test_distance_tasks_dummy_padding_invariant():
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_slot_gather_matches_matmul_onehot_oracle(metric):
+    """Acceptance: the O(T·d) slot-gather path agrees with the O(T·R·d)
+    matmul+one-hot oracle (both kernel and jnp forms) to 1e-4."""
+    N, d, R, T = 800, 96, 12, 512
+    db = _rand((N, d), jnp.float32, 40)
+    queries = _rand((R, d), jnp.float32, 41)
+    task_ids = jax.random.randint(jax.random.fold_in(KEY, 42), (T,), 0, N)
+    task_ids = task_ids.at[::7].set(-1)
+    task_slot = jax.random.randint(jax.random.fold_in(KEY, 43), (T,), 0, R)
+    gather = ops.distance_tasks(db, queries, task_ids, task_slot,
+                                metric=metric, mode="slot_gather")
+    onehot_kernel = ops.distance_tasks(db, queries, task_ids, task_slot,
+                                       metric=metric, mode="matmul_onehot")
+    onehot_oracle = ref.distance_tasks_onehot_ref(db, queries, task_ids,
+                                                  task_slot, metric=metric)
+    np.testing.assert_allclose(np.asarray(gather), np.asarray(onehot_oracle),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gather), np.asarray(onehot_kernel),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["slot_gather", "matmul_onehot"])
+def test_distance_tasks_dummy_padding_invariant(mode):
     """Appending masked dummies never changes real task results (paper:
     'round up with masked dummies to preserve a stable operator shape')."""
     db = _rand((300, 64), jnp.float32, 5)
     queries = _rand((8, 64), jnp.float32, 6)
     ids = jax.random.randint(jax.random.fold_in(KEY, 7), (256,), 0, 300)
     slot = jax.random.randint(jax.random.fold_in(KEY, 8), (256,), 0, 8)
-    base = ops.distance_tasks(db, queries, ids, slot)
+    base = ops.distance_tasks(db, queries, ids, slot, mode=mode)
     padded_ids = jnp.concatenate([ids, jnp.full((256,), -1, jnp.int32)])
     padded_slot = jnp.concatenate([slot, jnp.zeros((256,), jnp.int32)])
-    padded = ops.distance_tasks(db, queries, padded_ids, padded_slot)
+    padded = ops.distance_tasks(db, queries, padded_ids, padded_slot, mode=mode)
     np.testing.assert_allclose(np.asarray(base), np.asarray(padded[:256]),
                                rtol=1e-6)
 

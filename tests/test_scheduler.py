@@ -89,6 +89,18 @@ def test_controller_bounds():
     assert c2.r >= CFG.r_min - 1e-9
 
 
+def test_wait_handles_admission_at_time_zero():
+    """Regression: t_admitted == 0.0 is falsy but is a real admission time;
+    wait must not silently fall back to t_arrival."""
+    r = _req(0, "prefill", t=-0.5)
+    assert r.wait == 0.0  # not yet admitted
+    r.t_admitted = 0.0
+    assert r.wait == pytest.approx(0.5)  # admitted AT zero: waited 0.5 s
+    r2 = _req(1, "decode", t=1.0)
+    r2.t_admitted = 1.25
+    assert r2.wait == pytest.approx(0.25)
+
+
 @pytest.mark.parametrize("policy", ["prefill_first", "decode_first",
                                     "fifo_shared"])
 def test_baseline_policies_run(policy):

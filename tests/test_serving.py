@@ -45,6 +45,7 @@ def _workload(sim, n=24, seed=0, rag_interval=8, max_new=16):
     return t
 
 
+@pytest.mark.slow
 def test_all_requests_finish_with_sane_slos(pool_setup):
     sim = _mk_sim(pool_setup)
     t_end = _workload(sim) + 5.0
@@ -56,6 +57,7 @@ def test_all_requests_finish_with_sane_slos(pool_setup):
     assert s["throughput_tok_s"] > 0
 
 
+@pytest.mark.slow
 def test_decode_instance_failure_requeues_and_finishes(pool_setup):
     sim = _mk_sim(pool_setup, n_decode=3)
     t_last = _workload(sim, n=16)
@@ -67,6 +69,7 @@ def test_decode_instance_failure_requeues_and_finishes(pool_setup):
     assert not sim.decode_pool[0].health.alive
 
 
+@pytest.mark.slow
 def test_prefill_instance_failure_requeues(pool_setup):
     sim = _mk_sim(pool_setup, n_prefill=2)
     t_last = _workload(sim, n=16)
@@ -75,6 +78,7 @@ def test_prefill_instance_failure_requeues(pool_setup):
     assert sim.metrics.summary(0)["requests"] == 16
 
 
+@pytest.mark.slow
 def test_straggler_detected_and_routed_around(pool_setup):
     sim = _mk_sim(pool_setup, n_decode=3)
     sim.schedule(0.0, sim.set_decode_slowdown(1, 20.0))
