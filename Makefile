@@ -1,12 +1,17 @@
 # Developer loop targets. The tier-1 fast tier excludes tests marked `slow`
 # (registered in pyproject.toml); run `make verify-full` for the whole suite.
+# `verify-fast` is the alias CI/constrained containers should use — tier-1
+# minus the slow markers, stopping on first failure to bound wall-clock.
 
 PYTEST := PYTHONPATH=src python -m pytest
 
-.PHONY: verify verify-full bench bench-engine
+.PHONY: verify verify-fast verify-full bench bench-engine bench-preemption
 
 verify:
 	$(PYTEST) -q -m "not slow"
+
+verify-fast:
+	$(PYTEST) -x -q -m "not slow"
 
 verify-full:
 	$(PYTEST) -q
@@ -16,3 +21,6 @@ bench:
 
 bench-engine:
 	PYTHONPATH=src python -m benchmarks.bench_engine_dispatch
+
+bench-preemption:
+	PYTHONPATH=src python -m benchmarks.bench_preemption

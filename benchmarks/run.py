@@ -11,8 +11,9 @@ import argparse
 import time
 
 from benchmarks import (bench_architectures, bench_continuous_batching,
-                        bench_engine_dispatch, bench_recall_latency,
-                        bench_roofline_stages, bench_scheduler)
+                        bench_engine_dispatch, bench_preemption,
+                        bench_recall_latency, bench_roofline_stages,
+                        bench_scheduler)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -21,6 +22,7 @@ BENCHES = {
     "fig4_scheduler": bench_scheduler.run,
     "supp_recall_latency": bench_recall_latency.run,
     "supp_engine_dispatch": bench_engine_dispatch.run,
+    "supp_preemption": bench_preemption.run,
 }
 
 

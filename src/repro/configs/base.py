@@ -172,6 +172,12 @@ class VectorPoolConfig:
     prefill_deadline_ms: float = 25.0  # L_pre,max
     decode_deadline_ms: float = 100.0
     control_interval_ms: float = 200.0  # adaptive control loop period
+    # stage-aware preemption (paper contribution 3): evict running searches
+    # between fused extend chunks when urgent work is queued and no slot is
+    # free; checkpointed state resumes bit-identically (continuous_batching)
+    preemption_enabled: bool = True
+    preempt_slack_ms: float = 2.0  # queued slack below this => urgent
+    max_preemptions: int = 2  # per-request eviction cap (starvation guard)
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

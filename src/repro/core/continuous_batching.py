@@ -35,6 +35,21 @@ scatters write identical values) instead of one ``admit`` dispatch per
 request. Parent selection uses ``jax.lax.top_k`` on negated rank (O(M·p))
 instead of a full argsort (O(M log M)); ties break to the lower index in
 both, so selection is unchanged.
+
+Stage-aware preemption (Trinity's third pillar): a running slot can be
+*evicted* between fused extend chunks — its full search state (query vector,
+topM ids/dists, expanded flags, visited table, extend count) is pulled to a
+host-side ``SlotCheckpoint`` and the slot freed — and later *restored*
+bit-identically into any free slot (of this or another replica over the same
+index). Because one extend step is pure per-slot state → state (PRNG is only
+consumed at admission, and slots never interact), a resumed search emits the
+same ids/dists and the same total extend count as an uninterrupted one —
+asserted in tests/test_preemption.py. Engine API: ``preempt(request_ids)``
+→ ``[(rid, SlotCheckpoint), ...]`` (one gather dispatch + one host sync),
+``resume_batch([(rid, ckpt), ...])`` (one scatter dispatch, power-of-two
+padded like ``admit_many``). The preemption *policy* — who gets evicted and
+when — lives in core/scheduler.py; the pool (core/trinity_pool.py) wires the
+two together between chunks.
 """
 from __future__ import annotations
 
@@ -143,9 +158,9 @@ def admit_many(state: EngineState, db, slots, qvecs, entry_keys,
     """Batched ``admit``: seed a whole scheduler batch in one dispatch.
 
     slots (B,) int32 · qvecs (B, d) · entry_keys (B, 2) uint32 — one PRNG
-    subkey per request, in the exact order the per-request ``admit`` loop
-    would have consumed them, so results are bit-identical to B sequential
-    ``admit`` calls (asserted in tests; both paths vmap/call the shared
+    subkey per request (the host derives it by folding the request id into
+    the engine key), so results are bit-identical to B sequential ``admit``
+    calls in any order (asserted in tests; both paths vmap/call the shared
     ``_seed_request``). Duplicate slots (the host pads batches by
     replicating row 0) scatter identical values and are safe.
     """
@@ -164,6 +179,64 @@ def admit_many(state: EngineState, db, slots, qvecs, entry_keys,
         visited=state.visited.at[slots].set(visited_rows),
         active=state.active.at[slots].set(True),
         extends=state.extends.at[slots].set(jnp.zeros((B,), jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# jitted slot eviction / restore (stage-aware preemption)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlotCheckpoint:
+    """Host-side snapshot of one slot's full search state. Restoring it
+    into any free slot resumes the search bit-identically (slot identity
+    never enters the math; PRNG is only consumed at admission)."""
+
+    query_vec: np.ndarray  # (d,)
+    top_ids: np.ndarray  # (M,)
+    top_dists: np.ndarray  # (M,)
+    expanded: np.ndarray  # (M,) bool
+    visited: np.ndarray  # (V,) int32
+    extends: int
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def evict_slots(state: EngineState, slots):
+    """Gather the full per-slot state rows for ``slots`` and deactivate
+    them. slots (B,) int32, padded by replicating entry 0 (duplicate
+    gathers read identical rows; duplicate deactivations are idempotent).
+    Returns (new_state, rows) with rows ordered like ``SlotCheckpoint``
+    fields."""
+    rows = (state.query_vecs[slots], state.top_ids[slots],
+            state.top_dists[slots], state.expanded[slots],
+            state.visited[slots], state.extends[slots])
+    new_state = EngineState(
+        query_vecs=state.query_vecs,
+        top_ids=state.top_ids,
+        top_dists=state.top_dists,
+        expanded=state.expanded,
+        visited=state.visited,
+        active=state.active.at[slots].set(False),
+        extends=state.extends,
+    )
+    return new_state, rows
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def restore_slots(state: EngineState, slots, query_vecs, top_ids, top_dists,
+                  expanded, visited, extends):
+    """Scatter checkpointed rows back into ``slots`` and reactivate them —
+    the exact inverse of ``evict_slots``. Duplicate (padding) slots scatter
+    identical values and are safe."""
+    return EngineState(
+        query_vecs=state.query_vecs.at[slots].set(query_vecs),
+        top_ids=state.top_ids.at[slots].set(top_ids),
+        top_dists=state.top_dists.at[slots].set(top_dists),
+        expanded=state.expanded.at[slots].set(expanded),
+        visited=state.visited.at[slots].set(visited),
+        active=state.active.at[slots].set(True),
+        extends=state.extends.at[slots].set(extends),
     )
 
 
@@ -338,10 +411,18 @@ class ContinuousBatchingEngine:
     def num_free(self) -> int:
         return len(self.free_slots)
 
+    def _entry_key(self, request_id):
+        # per-request entry-point key derived from the request id, NOT from
+        # a sequentially-consumed stream: a request's search result is then
+        # a pure function of (qvec, rid), independent of admission order —
+        # preemption/re-admission reordering cannot perturb recall, and the
+        # on/off benchmark arms return bit-identical result sets
+        return jax.random.fold_in(self._key, int(request_id) & 0x7FFFFFFF)
+
     def admit(self, request_id, qvec) -> int:
         slot = self.free_slots.pop()
-        self._key, sub = jax.random.split(self._key)
-        self.state = admit(self.state, self.db, slot, jnp.asarray(qvec), sub,
+        self.state = admit(self.state, self.db, slot, jnp.asarray(qvec),
+                           self._entry_key(request_id),
                            num_entries=min(16, self.cfg.top_m // 2),
                            metric=self.cfg.metric)
         self.slot_request[slot] = request_id
@@ -350,20 +431,17 @@ class ContinuousBatchingEngine:
     def admit_batch(self, requests) -> List[int]:
         """Admit ``[(request_id, qvec), ...]`` in ONE jitted dispatch.
 
-        Consumes PRNG subkeys in the same order as per-request ``admit``
-        calls would, and the batch is padded to a power-of-two bucket (by
+        Entry keys are folded in per request id (same derivation as
+        ``admit``), and the batch is padded to a power-of-two bucket (by
         replicating row 0 — duplicate scatters write identical values) so
         only O(log max_requests) distinct shapes ever compile. Results are
-        bit-identical to sequential ``admit`` calls."""
+        bit-identical to sequential ``admit`` calls in any order."""
         if not requests:
             return []
         B = len(requests)
         assert B <= len(self.free_slots), (B, len(self.free_slots))
         slots = [self.free_slots.pop() for _ in range(B)]
-        subs = []
-        for _ in range(B):
-            self._key, sub = jax.random.split(self._key)
-            subs.append(sub)
+        subs = [self._entry_key(rid) for rid, _ in requests]
         b_pad = 1 << (B - 1).bit_length()
         pad = b_pad - B
         slots_p = np.asarray(slots + slots[:1] * pad, np.int32)
@@ -375,6 +453,58 @@ class ContinuousBatchingEngine:
                                 num_entries=min(16, self.cfg.top_m // 2),
                                 metric=self.cfg.metric)
         for slot, (rid, _) in zip(slots, requests):
+            self.slot_request[slot] = rid
+        return slots
+
+    def preempt(self, request_ids) -> List[Tuple[int, SlotCheckpoint]]:
+        """Evict the slots running ``request_ids``: one jitted gather
+        dispatch + one host sync pulls their full search state into
+        host-side ``SlotCheckpoint``s and frees the slots. Restoring a
+        checkpoint (here or on another replica over the same db/graph)
+        resumes the search bit-identically."""
+        if not request_ids:
+            return []
+        slot_of = {rid: slot for slot, rid in self.slot_request.items()}
+        slots = [slot_of[rid] for rid in request_ids]
+        B = len(slots)
+        pad = (1 << (B - 1).bit_length()) - B
+        slots_p = jnp.asarray(np.asarray(slots + slots[:1] * pad, np.int32))
+        self.state, rows = evict_slots(self.state, slots_p)
+        rows = jax.device_get(rows)  # the one host sync per preemption
+        qv, ids, dists, exp, vis, ext = (np.asarray(r) for r in rows)
+        out = []
+        for i, (rid, slot) in enumerate(zip(request_ids, slots)):
+            out.append((rid, SlotCheckpoint(
+                query_vec=qv[i].copy(), top_ids=ids[i].copy(),
+                top_dists=dists[i].copy(), expanded=exp[i].copy(),
+                visited=vis[i].copy(), extends=int(ext[i]))))
+            del self.slot_request[slot]
+            self.free_slots.append(slot)
+        return out
+
+    def resume_batch(self, items) -> List[int]:
+        """Re-seat ``[(request_id, SlotCheckpoint), ...]`` into free slots
+        in ONE jitted scatter dispatch (power-of-two padded like
+        ``admit_batch``). Returns the slots used."""
+        if not items:
+            return []
+        B = len(items)
+        assert B <= len(self.free_slots), (B, len(self.free_slots))
+        slots = [self.free_slots.pop() for _ in range(B)]
+        pad = (1 << (B - 1).bit_length()) - B
+        slots_p = jnp.asarray(np.asarray(slots + slots[:1] * pad, np.int32))
+        stack = lambda f: np.stack([f(c) for _, c in items]
+                                   + [f(items[0][1])] * pad)
+        self.state = restore_slots(
+            self.state, slots_p,
+            jnp.asarray(stack(lambda c: np.asarray(c.query_vec, np.float32))),
+            jnp.asarray(stack(lambda c: np.asarray(c.top_ids, np.int32))),
+            jnp.asarray(stack(lambda c: np.asarray(c.top_dists, np.float32))),
+            jnp.asarray(stack(lambda c: np.asarray(c.expanded, bool))),
+            jnp.asarray(stack(lambda c: np.asarray(c.visited, np.int32))),
+            jnp.asarray(stack(lambda c: np.int32(c.extends))),
+        )
+        for slot, (rid, _) in zip(slots, items):
             self.slot_request[slot] = rid
         return slots
 

@@ -9,6 +9,22 @@
   · Adaptive control loop (every control_interval): steer r and τ_pre from
     real-time feedback — KV-link utilisation u_kv vs target, prefill P95
     wait (TTFT proxy), decode RAG-stall fraction.
+  · Stage-aware preemption (paper contribution 3): when the engine is full
+    and queued work is *urgent* (slack below ``preempt_slack_ms`` — decode
+    probes past their slack threshold, prefill probes about to blow TTFT),
+    ``plan_preemption`` picks victims among the running requests by LARGEST
+    remaining slack (they can best afford the round trip), skipping any
+    already preempted ``max_preemptions`` times (starvation cap) and any
+    whose own slack is within 2× the urgency threshold (evicting a request
+    that is itself about to miss only moves the miss around). Victims are
+    re-queued via ``requeue_preempted`` with their engine checkpoint
+    attached at boosted priority — front of the decode FIFO, ahead of
+    non-checkpointed work in the prefill EDF sort — so they re-enter on the
+    next flush. ``VectorRequest.preemptions`` counts evictions and
+    ``resume_wait`` accumulates evicted time (preempt → re-admission).
+
+Knobs (configs/base.py VectorPoolConfig): ``preemption_enabled``,
+``preempt_slack_ms``, ``max_preemptions``.
 """
 from __future__ import annotations
 
@@ -32,6 +48,12 @@ class VectorRequest:
     t_completed: Optional[float] = None
     extends_used: int = 0
     result_ids: Optional[np.ndarray] = None
+    # stage-aware preemption bookkeeping
+    preemptions: int = 0  # times evicted so far (capped by max_preemptions)
+    checkpoint: Optional[object] = None  # engine SlotCheckpoint while queued
+    extends_done: int = 0  # extends already executed (stamped at eviction)
+    t_preempted: Optional[float] = None
+    resume_wait: float = 0.0  # total evicted time (preempt -> re-admission)
 
     @property
     def wait(self) -> float:
@@ -60,7 +82,13 @@ class PrefillQueue:
     def pop_by_slack(self, n: int, t_now: float, t_ext: float) -> List[VectorRequest]:
         if n <= 0 or not self._items:
             return []
-        self._items.sort(key=lambda r: r.deadline - (t_now + r.est_extends * t_ext))
+        # preempted (checkpointed) requests sort ahead of fresh ones at equal
+        # footing (boosted priority); within each class, EDF slack with the
+        # already-executed extends credited
+        self._items.sort(key=lambda r: (
+            r.checkpoint is None,
+            r.deadline - (t_now + max(r.est_extends - r.extends_done, 1.0)
+                          * t_ext)))
         out, self._items = self._items[:n], self._items[n:]
         return out
 
@@ -71,6 +99,10 @@ class DecodeQueue:
 
     def push(self, r: VectorRequest):
         self._q.append(r)
+
+    def push_front(self, r: VectorRequest):
+        """Boosted re-queue for preempted requests: next pop wins."""
+        self._q.appendleft(r)
 
     def __len__(self):
         return len(self._q)
@@ -171,9 +203,96 @@ class TwoQueueScheduler:
             pre += self.q_pre.pop_by_slack(n_slots - len(pre) - len(dec),
                                            t_now, self.t_ext_ewma)
             out = pre + dec
-        for req in out:
-            req.t_admitted = t_now
+        self._stamp_admitted(out, t_now)
         return out
+
+    def _stamp_admitted(self, reqs: List[VectorRequest], t_now: float):
+        for req in reqs:
+            if req.t_preempted is not None:
+                req.resume_wait += t_now - req.t_preempted
+                req.t_preempted = None
+            req.t_admitted = t_now
+
+    # -- stage-aware preemption (paper contribution 3) ----------------------
+    def _slack(self, r: VectorRequest, t_now: float,
+               running: bool = False) -> float:
+        """Deadline slack: ddl − (t_now + remaining·T_ext). Extends already
+        executed are credited — exactly for checkpointed requests (stamped
+        at eviction), elapsed-time estimated for running ones."""
+        done = float(r.extends_done)
+        if running and r.t_admitted is not None:
+            done += (t_now - r.t_admitted) / max(self.t_ext_ewma, 1e-9)
+        rem = max(r.est_extends - done, 1.0)
+        return r.deadline - (t_now + rem * self.t_ext_ewma)
+
+    def urgent_queued(self, t_now: float) -> List[VectorRequest]:
+        """Queued requests whose slack is below the urgency threshold but
+        still rescuable (slack > −threshold): a request already doomed to
+        miss by more than the estimation margin gains nothing from an
+        eviction, so sustained overload must not churn healthy running
+        work on its behalf."""
+        thr = self.cfg.preempt_slack_ms / 1e3
+        queued = (self.q_pre._items + list(self.q_dec._q)
+                  + list(self._shared_fifo))
+        return [r for r in queued if -thr < self._slack(r, t_now) < thr]
+
+    def plan_preemption(self, t_now: float, in_flight) -> List[VectorRequest]:
+        """Victim selection when the engine is full: one victim per urgent
+        queued request, chosen by LARGEST running slack, skipping requests
+        at the ``max_preemptions`` cap (starvation guard) and requests whose
+        own slack is within 2× the urgency threshold. Returns [] when
+        preemption is disabled or nothing urgent is queued."""
+        if not self.cfg.preemption_enabled:
+            return []
+        urgent = self.urgent_queued(t_now)
+        if not urgent:
+            return []
+        thr = self.cfg.preempt_slack_ms / 1e3
+        cands = []
+        for r in in_flight:
+            if r.preemptions >= self.cfg.max_preemptions:
+                continue
+            s = self._slack(r, t_now, running=True)
+            if s <= 2 * thr:
+                continue
+            cands.append((s, r))
+        cands.sort(key=lambda x: -x[0])
+        return [r for _, r in cands[:len(urgent)]]
+
+    def take_urgent(self, n: int, t_now: float) -> List[VectorRequest]:
+        """Dequeue the ≤ n most-urgent queued requests (smallest slack below
+        the threshold) across both queues, bypassing the r-reservation —
+        used to seat urgent probes directly into preemption-freed slots, so
+        a boosted victim can never win its own slot back ahead of the work
+        it was evicted for."""
+        if n <= 0:
+            return []
+        urgent = sorted(((self._slack(r, t_now), r.rid, r)
+                         for r in self.urgent_queued(t_now)))
+        picked = [r for _, _, r in urgent[:n]]
+        drop = set(map(id, picked))
+        self.q_pre._items = [r for r in self.q_pre._items
+                             if id(r) not in drop]
+        self.q_dec._q = deque(r for r in self.q_dec._q if id(r) not in drop)
+        self._shared_fifo = deque(r for r in self._shared_fifo
+                                  if id(r) not in drop)
+        self._stamp_admitted(picked, t_now)
+        return picked
+
+    def requeue_preempted(self, req: VectorRequest, ckpt, t_now: float):
+        """Re-queue an evicted request with its checkpoint attached at
+        boosted priority (front of the FIFO / ahead of fresh EDF work)."""
+        req.checkpoint = ckpt
+        req.extends_done = int(ckpt.extends)
+        req.preemptions += 1
+        req.t_preempted = t_now
+        req.t_admitted = None
+        if self.policy == "fifo_shared":
+            self._shared_fifo.appendleft(req)
+        elif req.kind == "prefill":
+            self.q_pre.push(req)  # pop_by_slack boosts checkpointed items
+        else:
+            self.q_dec.push_front(req)
 
     def should_flush(self, t_now: float, free_slots: int, active: int) -> bool:
         """Launch/admit decision: full batch, τ_pre for urgent prefill, or

@@ -10,6 +10,16 @@ Pool-level features beyond the paper's minimum, needed at 1000-node scale:
     ``min_replicas`` and ``max_replicas``,
   · failure handling: ``kill_replica`` re-queues its in-flight requests.
 
+Stage-aware preemption: before admitting each flush, a full engine with
+urgent queued work (scheduler ``plan_preemption``) evicts its largest-slack
+victims between fused extend chunks — ``engine.preempt`` checkpoints their
+search state host-side, the scheduler re-queues them at boosted priority,
+and the freed slots are flushed immediately so the urgent probes make the
+very next chunk. Resumed requests re-enter through the same ``select`` path
+(``engine.resume_batch`` re-seats checkpoints bit-identically). Pool-level
+counters: ``PoolMetrics.preemptions`` / ``resumes`` / ``preempt_time`` (sum
+of evicted wall-time, from ``VectorRequest.resume_wait``).
+
 Fused stepping: each ``_step_replica`` issues ONE device dispatch covering
 ``cfg.extend_chunk`` extend steps (engine ``step_multi``) and one batched
 ``admit_batch`` dispatch for the whole scheduler flush. The replica clock
@@ -38,6 +48,10 @@ class PoolMetrics:
     extend_steps: int = 0
     tasks_emitted: int = 0
     tasks_capacity: int = 0
+    # stage-aware preemption
+    preemptions: int = 0  # slot evictions
+    resumes: int = 0  # checkpointed requests re-seated
+    preempt_time: float = 0.0  # total evicted time across completed reqs
 
     def latencies(self, kind: Optional[str] = None) -> np.ndarray:
         xs = [r.t_completed - r.t_arrival for r in self.completed
@@ -88,14 +102,16 @@ class VectorPool:
         self.feedback = ControllerFeedback()
         self._use_pallas = use_pallas
         self._seed = seed
-        self._pending: list = []  # (t_arrival, tiebreak, request) heap
+        self._pending: list = []  # (t_arrival, seq, request) heap
+        self._pending_seq = 0  # deterministic tiebreak (id() varies by run)
         self.peak_replicas = replicas
 
     # ------------------------------------------------------------------ API
     def submit(self, req: VectorRequest):
         """Requests become visible to the scheduler at their arrival time
         (event-driven semantics)."""
-        heapq.heappush(self._pending, (req.t_arrival, id(req), req))
+        heapq.heappush(self._pending, (req.t_arrival, self._pending_seq, req))
+        self._pending_seq += 1
 
     def _release_pending(self, t_now: float):
         while self._pending and self._pending[0][0] <= t_now:
@@ -119,6 +135,9 @@ class VectorPool:
         rep = self.replicas.pop(idx)
         for req in rep.in_flight.values():
             req.t_admitted = None
+            # device state is gone: restart from scratch on re-admission
+            req.checkpoint = None
+            req.extends_done = 0
             self.scheduler.submit(req)
 
     def add_replica(self):
@@ -137,20 +156,56 @@ class VectorPool:
         rep.quarantined = rep.ext_latency_ewma > self.straggler_factor * med
         return not rep.quarantined
 
+    def _admit(self, rep: _Replica, batch: List[VectorRequest]):
+        """Seat a scheduler flush: fresh requests through one vmapped
+        ``admit_batch`` dispatch, checkpointed ones through one
+        ``resume_batch`` scatter (bit-identical resume)."""
+        fresh = [r for r in batch if r.checkpoint is None]
+        resumed = [r for r in batch if r.checkpoint is not None]
+        if fresh:
+            rep.engine.admit_batch([(r.rid, r.qvec) for r in fresh])
+        if resumed:
+            rep.engine.resume_batch([(r.rid, r.checkpoint) for r in resumed])
+            for req in resumed:
+                req.checkpoint = None
+            self.metrics.resumes += len(resumed)
+        for req in batch:
+            rep.in_flight[req.rid] = req
+
+    def _maybe_preempt(self, rep: _Replica, t: float):
+        """Between fused chunks: full engine + urgent queued work => evict
+        the scheduler's victims, checkpoint them, re-queue boosted, and
+        seat the urgent probes straight into the freed slots (bypassing the
+        r-reservation so a boosted victim cannot reclaim its own slot ahead
+        of the work it was evicted for)."""
+        if not self.cfg.preemption_enabled or rep.engine.num_free > 0:
+            return
+        victims = self.scheduler.plan_preemption(
+            t, list(rep.in_flight.values()))
+        if not victims:
+            return
+        for rid, ckpt in rep.engine.preempt([v.rid for v in victims]):
+            req = rep.in_flight.pop(rid)
+            self.scheduler.requeue_preempted(req, ckpt, t)
+        self.metrics.preemptions += len(victims)
+        urgent = self.scheduler.take_urgent(rep.engine.num_free, t)
+        if urgent:
+            self._admit(rep, urgent)
+
     def _step_replica(self, rep: _Replica, t_end: float):
         t = rep.clock
         self.scheduler.controller.maybe_update(t, self.feedback)
         self._maybe_scale(t)
 
+        healthy = self._healthy(rep)
+        if healthy:
+            self._maybe_preempt(rep, t)
         free = rep.engine.num_free
-        if self._healthy(rep) and \
+        if healthy and \
                 self.scheduler.should_flush(t, free, rep.engine.num_active):
             batch = self.scheduler.select(free, t)
             if batch:
-                # ONE vmapped admission dispatch for the whole flush
-                rep.engine.admit_batch([(r.rid, r.qvec) for r in batch])
-                for req in batch:
-                    rep.in_flight[req.rid] = req
+                self._admit(rep, batch)
 
         if rep.engine.num_active == 0:
             # idle: jump to the next arrival (or a small quantum / t_end)
@@ -179,6 +234,7 @@ class VectorPool:
             req.t_completed = t + (substep + 1) * dt
             req.extends_used = extends
             req.result_ids = ids
+            self.metrics.preempt_time += req.resume_wait
             self.metrics.completed.append(req)
 
     def _maybe_scale(self, t_now: float):

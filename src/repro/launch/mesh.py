@@ -20,3 +20,17 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     assert n % model_axis == 0
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Version-compat ``jax.sharding.AbstractMesh``.
+
+    Recent jax takes ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x wants
+    a single ``((name, size), ...)`` shape tuple. Device-free either way —
+    safe for sharding-rule tests and dry-run planning on any host."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))

@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import axis_size, constrain, shard_map
 from repro.models import layers
 
 NEG_INF = -1e30
@@ -193,7 +193,7 @@ def decode_step_attention(params, x_step, cache, cur_len, cfg,
             cspec = {"k": P(b, seq_axis, None, None),
                      "v": P(b, seq_axis, None, None)}
             qspec = P(b, None, None, None)
-            out, new_cache = jax.shard_map(
+            out, new_cache = shard_map(
                 lambda q_, kn, vn, c, cl: _cached_attention_core(
                     q_, kn, vn, c, cl, cfg, seq_axis),
                 mesh=mesh,
@@ -222,7 +222,7 @@ def _cached_attention_core(q, k_new, v_new, cache, cur_len, cfg,
         n_shards = 1
     else:
         shard0 = jax.lax.axis_index(seq_axis) * S_local
-        n_shards = jax.lax.axis_size(seq_axis)
+        n_shards = axis_size(seq_axis)
 
     # -- cache write: only the shard owning position cur_len writes.
     local_ix = jnp.clip(cur_len - shard0, 0, S_local - 1)

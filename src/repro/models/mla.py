@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import axis_size, shard_map
 from repro.models import layers
 from repro.models.attention import NEG_INF, attend_blocked
 
@@ -112,7 +113,7 @@ def mla_decode_step(params, x_step, cache, cur_len, cfg,
                      "kr": P(b, seq_axis, None)}
             q4 = P(b, None, None, None)
             c3 = P(b, None, None)
-            out_c, cache = jax.shard_map(
+            out_c, cache = shard_map(
                 lambda qa, qr, cn, kn, c, cl: _cached_mla_core(
                     qa, qr, cn, kn, c, cl, cfg, seq_axis),
                 mesh=mesh,
@@ -149,7 +150,7 @@ def _cached_mla_core(q_abs, q_rope, ckv_new, kr_new, cache, cur_len, cfg,
         n_shards = 1
     else:
         shard0 = jax.lax.axis_index(seq_axis) * S_local
-        n_shards = jax.lax.axis_size(seq_axis)
+        n_shards = axis_size(seq_axis)
 
     local_ix = jnp.clip(cur_len - shard0, 0, S_local - 1)
     owns = (cur_len >= shard0) & (cur_len < shard0 + S_local)

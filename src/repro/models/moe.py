@@ -82,12 +82,16 @@ def moe_forward(params, x, cfg, capacity: int = 0):
     keep = pos_in_e < C
     dest = jnp.where(keep, se.astype(jnp.int32) * C + pos_in_e, E * C)  # OOB drop
 
-    # slot -> source token (fill = T, an all-zero pad row)
+    # slot -> source token (fill = T, masked below; no pad row — gathering
+    # from concat([x, pad_row]) is mispartitioned by the 0.4.x SPMD pass
+    # when x is batch-sharded, silently corrupting every MoE output)
     slot_tok = jnp.full((E * C,), T, jnp.int32).at[dest].set(stok, mode="drop")
     slot_gate = jnp.zeros((E * C,), jnp.float32).at[dest].set(sgate, mode="drop")
 
-    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
-    xe = constrain(x_pad[slot_tok].reshape(E, C, d), "model", None, None)
+    slot_valid = slot_tok < T
+    xe = jnp.where(slot_valid[:, None],
+                   x[jnp.minimum(slot_tok, T - 1)], jnp.zeros((), x.dtype))
+    xe = constrain(xe.reshape(E, C, d), "model", None, None)
 
     # -- batched expert FFN (E sharded on "model" => expert parallelism)
     h_gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
@@ -95,10 +99,10 @@ def moe_forward(params, x, cfg, capacity: int = 0):
     y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h_gate) * h_up, params["w_down"])
     y = constrain(y, "model", None, None)
 
-    # -- weighted combine back to tokens
+    # -- weighted combine back to tokens (empty slots index T: OOB-dropped)
     y = (y.reshape(E * C, d).astype(jnp.float32)
          * slot_gate[:, None])
-    out = jnp.zeros((T + 1, d), jnp.float32).at[slot_tok].add(y)[:T]
+    out = jnp.zeros((T, d), jnp.float32).at[slot_tok].add(y, mode="drop")
     out = constrain(out, "batch", None)
 
     if m.num_shared_experts > 0:

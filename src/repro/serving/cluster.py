@@ -256,13 +256,22 @@ class ClusterSim:
                      if v.kind == "prefill"]
         fb.prefill_p95_wait = percentile(pre_waits, 95) if pre_waits else 0.0
         if self._recent_stalls:
-            # stall fraction proxy: stall per Δ tokens of decode time
+            # stall fraction proxy: stall per Δ tokens of decode time.
+            # Median step EWMA over ALIVE decode instances — instance 0 may
+            # be dead (kill_decode(0)) or a straggler, and its stale EWMA
+            # would skew the stall fraction for the whole control loop.
             avg_stall = float(np.mean(self._recent_stalls))
-            step = self.decode_pool[0].health.step_ewma or 1e-3
+            ew = [i.health.step_ewma for i in self.decode_pool
+                  if i.health.alive and i.health.step_ewma > 0]
+            step = float(np.median(ew)) if ew else 1e-3
             delta = max(1, next((r.rag_interval for i in self.decode_pool
                                  for r in i.active.values()), 64))
             fb.decode_stall_frac = avg_stall / max(avg_stall + step * delta,
                                                    1e-9)
+        # surface pool-level preemption counters for cluster summaries
+        pm = self.vector_pool.metrics
+        self.metrics.pool_preemptions = pm.preemptions
+        self.metrics.pool_resumes = pm.resumes
 
     # ----------------------------------------------------------- failures
     def kill_prefill(self, idx: int):

@@ -50,6 +50,9 @@ def percentile(xs, q):
 @dataclasses.dataclass
 class ClusterMetrics:
     finished: List[GenRequest] = dataclasses.field(default_factory=list)
+    # vector-pool stage-aware preemption (stamped by ClusterSim)
+    pool_preemptions: int = 0
+    pool_resumes: int = 0
 
     def summary(self, t_elapsed: float) -> dict:
         fin = self.finished
@@ -65,4 +68,6 @@ class ClusterMetrics:
             "tpot_p95": percentile([r.tpot for r in fin], 95),
             "decode_stall_frac": stall / max(decode_time, 1e-9),
             "re_prefills": sum(r.re_prefills for r in fin),
+            "pool_preemptions": self.pool_preemptions,
+            "pool_resumes": self.pool_resumes,
         }

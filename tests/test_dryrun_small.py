@@ -39,9 +39,11 @@ def test_cost_analysis_scales_loop_bodies():
 def test_collectives_counted():
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.sharding import shard_map
+
     mesh = jax.make_mesh((1,), ("x",))
-    fn = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
-                               in_specs=P("x"), out_specs=P()))
+    fn = jax.jit(shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                           in_specs=P("x"), out_specs=P()))
     c = fn.lower(jax.ShapeDtypeStruct((8, 128), jnp.float32)).compile()
     coll = analyze(c.as_text())["collective_bytes"]
     assert coll.get("all-reduce", 0) == 8 * 128 * 4
@@ -51,8 +53,9 @@ def test_sharding_rules_divisibility():
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.sharding import spec_for_leaf
+    from repro.launch.mesh import abstract_mesh
 
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     # divisible dims shard; non-divisible replicate
     assert spec_for_leaf("blocks/l0/attn/wq", (64, 128), mesh) == \
         P("data", "model")

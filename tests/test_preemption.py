@@ -1,0 +1,161 @@
+"""Stage-aware preemption (paper contribution 3): evict→restore
+bit-identity at the engine layer, and deadline rescue at the pool layer."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.continuous_batching import ContinuousBatchingEngine
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import VectorPool
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(2000, 64, num_clusters=16, num_queries=64,
+                               seed=7)
+    graph = make_cagra_graph(db, degree=16, seed=7)
+    cfg = VectorPoolConfig(num_vectors=2000, dim=64, graph_degree=16,
+                           max_requests=8, top_m=32, parents_per_step=2,
+                           task_batch=1024, visited_slots=512, top_k=10)
+    return cfg, db, graph, queries
+
+
+def _drain_map(engine):
+    return {rid: (ids, dists, ext)
+            for rid, ids, dists, ext in engine.run_to_completion()}
+
+
+def test_evict_restore_bit_identity(setup):
+    """A search preempted mid-flight and later resumed must produce the
+    same top-k ids/dists and the same total extend count as the same search
+    run uninterrupted (acceptance criterion)."""
+    cfg, db, graph, queries = setup
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e1.admit_batch([(i, queries[i]) for i in range(6)])
+    r1 = _drain_map(e1)
+
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e2.admit_batch([(i, queries[i]) for i in range(6)])
+    e2.step_multi(2)
+    victims = sorted(e2.slot_request.values())[:3]
+    ckpts = e2.preempt(victims)
+    assert e2.num_free >= 3 and sorted(r for r, _ in ckpts) == victims
+    e2.step_multi(4)  # survivors progress while victims sit evicted
+    e2.resume_batch(ckpts)
+    r2 = _drain_map(e2)
+
+    assert r1.keys() == r2.keys()
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid][0], r2[rid][0], err_msg="ids")
+        np.testing.assert_array_equal(r1[rid][1], r2[rid][1], err_msg="dists")
+        assert r1[rid][2] == r2[rid][2], (rid, "extends")
+
+
+def test_restore_into_different_slot_and_engine(setup):
+    """Checkpoints are slot- and replica-portable: restoring into another
+    engine over the same db/graph (fresh slot numbering) resumes
+    bit-identically — what kill_replica-style migration relies on."""
+    cfg, db, graph, queries = setup
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e1.admit_batch([(i, queries[i]) for i in range(4)])
+    r1 = _drain_map(e1)
+
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e2.admit_batch([(i, queries[i]) for i in range(4)])
+    e2.step_multi(3)
+    live = sorted(e2.slot_request.values())
+    ckpts = e2.preempt(live)
+    e3 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=99)
+    e3.resume_batch(ckpts)
+    r3 = _drain_map(e3)
+    for rid in r3:  # completed-before-preempt requests drained from e2
+        np.testing.assert_array_equal(r1[rid][0], r3[rid][0])
+        assert r1[rid][2] == r3[rid][2]
+
+
+def test_results_independent_of_admission_order(setup):
+    """Entry keys fold in the request id, so re-ordering admissions (what
+    preemption re-queueing does) cannot perturb any request's result."""
+    cfg, db, graph, queries = setup
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e1.admit_batch([(i, queries[i]) for i in range(6)])
+    r1 = _drain_map(e1)
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e2.admit_batch([(i, queries[i]) for i in reversed(range(6))])
+    r2 = _drain_map(e2)
+    assert r1.keys() == r2.keys()
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid][0], r2[rid][0])
+
+
+def _probe_run(cfg, db, graph, queries, enabled):
+    """One synchronized prefill storm + one tight-deadline decode probe on
+    a 20x-slowed replica."""
+    cfg = dataclasses.replace(
+        cfg, decode_deadline_ms=3.0, prefill_deadline_ms=60.0,
+        preempt_slack_ms=2.5, max_preemptions=2,
+        preemption_enabled=enabled)
+    pool = VectorPool(cfg, db, graph, replicas=1, policy="trinity",
+                      use_pallas=False, seed=0)
+    pool.set_slowdown(0, 20.0)
+    for i in range(16):
+        pool.submit(VectorRequest(i, "prefill", queries[i], 0.0, 60e-3))
+    probe = VectorRequest(100, "decode", queries[32], 0.5e-3, 3.5e-3)
+    pool.submit(probe)
+    pool.run_until(0.05)
+    return probe, pool
+
+
+def test_pool_preemption_rescues_decode_deadline(setup):
+    """The burst scenario in miniature: with preemption the decode probe
+    jumps the storm and beats its deadline; without it the probe waits for
+    a natural completion and misses — with bit-identical result ids either
+    way (acceptance criterion)."""
+    cfg, db, graph, queries = setup
+    p_on, pool_on = _probe_run(cfg, db, graph, queries, True)
+    p_off, pool_off = _probe_run(cfg, db, graph, queries, False)
+
+    assert pool_on.metrics.preemptions > 0
+    assert pool_on.metrics.resumes == pool_on.metrics.preemptions
+    assert pool_off.metrics.preemptions == 0
+    assert p_on.t_completed is not None and p_on.t_completed <= p_on.deadline
+    assert p_off.t_completed is None or p_off.t_completed > p_off.deadline
+    np.testing.assert_array_equal(p_on.result_ids, p_off.result_ids)
+    assert p_on.extends_used == p_off.extends_used
+
+    # the evicted victims completed correctly too, and were stamped
+    victims = [r for r in pool_on.metrics.completed if r.preemptions > 0]
+    assert victims and all(v.resume_wait > 0 for v in victims)
+    assert pool_on.metrics.preempt_time > 0
+    # every storm request still finishes in both runs
+    done_on = {r.rid for r in pool_on.metrics.completed}
+    done_off = {r.rid for r in pool_off.metrics.completed}
+    assert done_on == done_off == set(range(16)) | {100}
+
+
+def test_preemption_cap_prevents_starvation(setup):
+    """A request evicted ``max_preemptions`` times is immune afterwards, so
+    a stream of urgent probes cannot starve it forever."""
+    cfg, db, graph, queries = setup
+    cfg = dataclasses.replace(cfg, decode_deadline_ms=2.0,
+                              prefill_deadline_ms=120.0,
+                              preempt_slack_ms=2.5, max_preemptions=1,
+                              preemption_enabled=True)
+    pool = VectorPool(cfg, db, graph, replicas=1, policy="trinity",
+                      use_pallas=False, seed=0)
+    pool.set_slowdown(0, 20.0)
+    for i in range(24):
+        pool.submit(VectorRequest(i, "prefill", queries[i], 0.0, 120e-3))
+    t = 0.3e-3
+    for j in range(40):  # relentless urgent probes
+        pool.submit(VectorRequest(100 + j, "decode",
+                                  queries[32 + j % 16], t, t + 2e-3))
+        t += 0.25e-3
+    pool.run_until(0.3)
+    done = {r.rid for r in pool.metrics.completed}
+    assert done == set(range(24)) | {100 + j for j in range(40)}
+    assert all(r.preemptions <= 1 for r in pool.metrics.completed)

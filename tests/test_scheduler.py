@@ -109,3 +109,110 @@ def test_baseline_policies_run(policy):
         s.submit(_req(i, "prefill" if i % 2 else "decode", t=i * 0.01))
     picked = s.select(6, t_now=1.0)
     assert len(picked) == 6
+
+
+# ---------------------------------------------------------------------------
+# stage-aware preemption policy
+# ---------------------------------------------------------------------------
+
+
+class _Ckpt:
+    def __init__(self, extends=5):
+        self.extends = extends
+
+
+def _sched(**cfg_kw):
+    import dataclasses
+    kw = dict(preemption_enabled=True, preempt_slack_ms=2.0,
+              max_preemptions=2)
+    kw.update(cfg_kw)
+    cfg = dataclasses.replace(CFG, **kw)
+    s = TwoQueueScheduler(cfg, policy="trinity")
+    s.t_ext_ewma = 100e-6  # deterministic slack arithmetic
+    return s
+
+
+def test_plan_preemption_picks_largest_slack_victims():
+    s = _sched()
+    # urgent queued decode probe: ddl 1 ms, est 16 extends => slack < 2 ms
+    s.submit(_req(1, "decode", t=0.0, ddl=1e-3, est=16))
+    running = [_req(10, "prefill", ddl=0.050, est=16),  # huge slack
+               _req(11, "prefill", ddl=0.010, est=16),  # medium slack
+               _req(12, "prefill", ddl=0.0045, est=16)]  # small slack
+    for r in running:
+        r.t_admitted = 0.0
+    victims = s.plan_preemption(0.0, running)
+    assert [v.rid for v in victims] == [10]  # one urgent => one victim
+
+
+def test_plan_preemption_respects_cap_and_victim_slack_floor():
+    s = _sched()
+    s.submit(_req(1, "decode", t=0.0, ddl=1e-3, est=16))
+    s.submit(_req(2, "decode", t=0.0, ddl=1e-3, est=16))
+    capped = _req(10, "prefill", ddl=0.050, est=16)
+    capped.preemptions = 2  # at max_preemptions: immune
+    tight = _req(11, "prefill", ddl=0.0045, est=16)  # slack ~2.9ms < 2*thr
+    ok = _req(12, "prefill", ddl=0.030, est=16)
+    for r in (capped, tight, ok):
+        r.t_admitted = 0.0
+    victims = s.plan_preemption(0.0, [capped, tight, ok])
+    assert [v.rid for v in victims] == [12]
+
+
+def test_plan_preemption_noop_without_urgency_or_when_disabled():
+    s = _sched()
+    s.submit(_req(1, "decode", t=0.0, ddl=1.0, est=16))  # relaxed ddl
+    running = [_req(10, "prefill", ddl=0.050, est=16)]
+    running[0].t_admitted = 0.0
+    assert s.plan_preemption(0.0, running) == []
+    s2 = _sched(preemption_enabled=False)
+    s2.submit(_req(1, "decode", t=0.0, ddl=1e-3, est=16))
+    assert s2.plan_preemption(0.0, running) == []
+
+
+def test_doomed_requests_are_not_urgent():
+    """A queued request already past rescue (slack below −threshold) must
+    not trigger evictions — preempting healthy work cannot save it."""
+    s = _sched()
+    s.submit(_req(1, "decode", t=0.0, ddl=-1.0, est=16))  # long doomed
+    running = [_req(10, "prefill", ddl=0.050, est=16)]
+    running[0].t_admitted = 0.0
+    assert s.urgent_queued(0.0) == []
+    assert s.plan_preemption(0.0, running) == []
+    assert s.take_urgent(4, 0.0) == []
+
+
+def test_requeue_preempted_boosted_priority():
+    """A checkpointed decode victim re-enters ahead of the FIFO; a
+    checkpointed prefill victim sorts ahead of fresh EDF work."""
+    s = _sched()
+    for i in range(3):
+        s.submit(_req(i, "decode", t=i * 0.01))
+    vic = _req(99, "decode", t=0.5)
+    s.requeue_preempted(vic, _Ckpt(extends=7), t_now=1.0)
+    assert vic.preemptions == 1 and vic.extends_done == 7
+    assert vic.checkpoint is not None and vic.t_admitted is None
+    picked = s.select(1, t_now=1.0)
+    assert [r.rid for r in picked] == [99]
+    assert vic.t_admitted == 1.0 and vic.resume_wait == pytest.approx(0.0)
+
+    s2 = _sched()
+    s2.controller.r = 1.0
+    s2.submit(_req(1, "prefill", ddl=0.5))  # much less slack than victim
+    vic2 = _req(98, "prefill", ddl=50.0)
+    s2.requeue_preempted(vic2, _Ckpt(), t_now=1.0)
+    assert s2.select(1, t_now=2.0)[0].rid == 98
+    assert vic2.resume_wait == pytest.approx(1.0)  # evicted 1.0 -> 2.0
+
+
+def test_take_urgent_bypasses_reservation_and_removes_from_queues():
+    s = _sched()
+    s.controller.r = 1.0  # reservation would hand everything to prefill
+    s.submit(_req(1, "prefill", t=0.0, ddl=100.0))
+    urgent = _req(2, "decode", t=0.0, ddl=1e-3, est=16)
+    s.submit(urgent)
+    got = s.take_urgent(2, t_now=0.0)
+    assert [r.rid for r in got] == [2]
+    assert urgent.t_admitted == 0.0
+    assert s.queued() == 1  # the prefill stays queued
+

@@ -106,6 +106,26 @@ def test_vector_pool_elastic_scaling(pool_setup):
     assert len(pool.metrics.completed) == 200
 
 
+def test_feedback_uses_median_of_alive_decode_ewma(pool_setup):
+    """Regression: _update_feedback read decode_pool[0].health.step_ewma
+    unconditionally — after kill_decode(0) (or with instance 0 straggling)
+    the dead instance's stale EWMA skewed decode_stall_frac for the whole
+    adaptive control loop. It must use the median over ALIVE instances."""
+    sim = _mk_sim(pool_setup, n_decode=3)
+    sim._recent_stalls.append(0.01)
+    sim.decode_pool[0].health.alive = False
+    sim.decode_pool[0].health.step_ewma = 1e9  # stale garbage
+    sim.decode_pool[1].health.step_ewma = 1e-3
+    sim.decode_pool[2].health.step_ewma = 2e-3
+    sim._update_feedback()
+    fb = sim.vector_pool.feedback
+    # median over alive = 1.5e-3; no active request => delta falls back 64
+    expected = 0.01 / (0.01 + 1.5e-3 * 64)
+    assert fb.decode_stall_frac == pytest.approx(expected)
+    # with the dead instance's 1e9 EWMA the fraction would have been ~0
+    assert fb.decode_stall_frac > 0.05
+
+
 def test_paged_kv_manager_accounting():
     cfg = get_config("gemma-7b")
     mgr = PagedKVManager(capacity_bytes=1e9, cfg=cfg, page_tokens=128)
