@@ -5,7 +5,8 @@
 
 PYTEST := PYTHONPATH=src python -m pytest
 
-.PHONY: verify verify-fast verify-full bench bench-engine bench-preemption
+.PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
+	bench-cache
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -24,3 +25,6 @@ bench-engine:
 
 bench-preemption:
 	PYTHONPATH=src python -m benchmarks.bench_preemption
+
+bench-cache:
+	PYTHONPATH=src python -m benchmarks.bench_semantic_cache

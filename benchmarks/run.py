@@ -13,7 +13,7 @@ import time
 from benchmarks import (bench_architectures, bench_continuous_batching,
                         bench_engine_dispatch, bench_preemption,
                         bench_recall_latency, bench_roofline_stages,
-                        bench_scheduler)
+                        bench_scheduler, bench_semantic_cache)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -23,6 +23,7 @@ BENCHES = {
     "supp_recall_latency": bench_recall_latency.run,
     "supp_engine_dispatch": bench_engine_dispatch.run,
     "supp_preemption": bench_preemption.run,
+    "supp_semantic_cache": bench_semantic_cache.run,
 }
 
 

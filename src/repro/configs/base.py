@@ -178,6 +178,17 @@ class VectorPoolConfig:
     preemption_enabled: bool = True
     preempt_slack_ms: float = 2.0  # queued slack below this => urgent
     max_preemptions: int = 2  # per-request eviction cap (starvation guard)
+    # semantic answer cache (retrieval-class workload): prompt-embedding
+    # lookup before prefill; a hit under the distance threshold serves the
+    # cached answer and skips the whole PD pipeline; a miss inserts the new
+    # (prompt embedding -> answer) pair at completion as a deadline-less
+    # background-class request that fills spare engine slots
+    semantic_cache_enabled: bool = False
+    cache_capacity: int = 1024  # initial cache-segment capacity (doubles)
+    cache_hit_threshold: float = 0.25  # hit iff best cache dist <= this
+    cache_top_k: int = 4  # results returned per cache lookup
+    cache_lookup_budget: int = 32  # extend budget per lookup (0 = unlimited)
+    insert_budget: int = 16  # extend budget per insert neighbor search
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

@@ -36,6 +36,17 @@ request. Parent selection uses ``jax.lax.top_k`` on negated rank (O(M·p))
 instead of a full argsort (O(M log M)); ties break to the lower index in
 both, so selection is unchanged.
 
+Per-slot search params (retrieval-class heterogeneity): each slot carries
+its own entry-point range (``entry_lo``/``entry_hi`` — index segment the
+seeding samples from), extend budget (``budget``: forced completion once a
+search has consumed that many extends, 0 = run to natural convergence) and
+top-k truncation (host-side, applied when the completion is collected).
+All of it rides the existing fixed kernel shapes: the budget is one extra
+(R,) int32 column in the engine state, the entry range only parameterises
+admission seeding (traced scalars — no recompile per class), and top-k
+never reaches the device. Defaults reproduce the old single-class engine
+bit-identically.
+
 Stage-aware preemption (Trinity's third pillar): a running slot can be
 *evicted* between fused extend chunks — its full search state (query vector,
 topM ids/dists, expanded flags, visited table, extend count) is pulled to a
@@ -76,10 +87,11 @@ class EngineState:
     visited: jnp.ndarray  # (R, V) int32
     active: jnp.ndarray  # (R,) bool
     extends: jnp.ndarray  # (R,) int32
+    budget: jnp.ndarray  # (R,) int32 — forced-completion extend budget, 0=off
 
     def tree_flatten(self):
         return ((self.query_vecs, self.top_ids, self.top_dists, self.expanded,
-                 self.visited, self.active, self.extends), None)
+                 self.visited, self.active, self.extends, self.budget), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -96,7 +108,23 @@ def init_engine_state(cfg, dtype=jnp.float32) -> EngineState:
         visited=jnp.full((R, V), -1, jnp.int32),
         active=jnp.zeros((R,), bool),
         extends=jnp.zeros((R,), jnp.int32),
+        budget=jnp.zeros((R,), jnp.int32),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotParams:
+    """Per-slot search parameters, derived from a request's retrieval
+    class by the pool. ``entry_hi = 0`` means "the engine's corpus rows"
+    (resolved host-side at admission)."""
+
+    top_k: Optional[int] = None  # result truncation (None = cfg.top_k)
+    budget: int = 0  # forced completion after this many extends (0 = off)
+    entry_lo: int = 0  # entry-point sampling range [lo, hi)
+    entry_hi: int = 0
+
+
+DEFAULT_PARAMS = SlotParams()
 
 
 # ---------------------------------------------------------------------------
@@ -104,14 +132,16 @@ def init_engine_state(cfg, dtype=jnp.float32) -> EngineState:
 # ---------------------------------------------------------------------------
 
 
-def _seed_request(db, qvec, entry_key, *, top_m: int, visited_slots: int,
-                  num_entries: int, metric: str):
+def _seed_request(db, qvec, entry_key, entry_lo, entry_hi, *, top_m: int,
+                  visited_slots: int, num_entries: int, metric: str):
     """Shared seeding body for ``admit`` / ``admit_many``: random entry
-    points + their exact distances (metric-aware), padded to topM, entries
-    inserted into a fresh visited row. Keeping this in one place makes the
-    per-request and batched admission paths equivalent by construction."""
-    N = db.shape[0]
-    entries = jax.random.randint(entry_key, (num_entries,), 0, N)
+    points in ``[entry_lo, entry_hi)`` (the slot's index segment) + their
+    exact distances (metric-aware), padded to topM, entries inserted into a
+    fresh visited row. Keeping this in one place makes the per-request and
+    batched admission paths equivalent by construction. The range bounds
+    are traced scalars, so heterogeneous segments share one compile."""
+    entries = jax.random.randint(entry_key, (num_entries,), entry_lo,
+                                 entry_hi)
     x = db[entries].astype(jnp.float32)
     q = qvec[None].astype(jnp.float32)
     if metric == "l2":
@@ -131,14 +161,15 @@ def _seed_request(db, qvec, entry_key, *, top_m: int, visited_slots: int,
 
 @functools.partial(jax.jit, static_argnames=("num_entries", "metric"),
                    donate_argnums=(0,))
-def admit(state: EngineState, db, slot, qvec, entry_key,
-          num_entries: int = 16, metric: str = "l2"):
+def admit(state: EngineState, db, slot, qvec, entry_key, entry_lo, entry_hi,
+          budget, num_entries: int = 16, metric: str = "l2"):
     """Place a new request into `slot`: reset state, seed topM with random
-    entry points (ids + exact distances), insert entries into visited."""
+    entry points (ids + exact distances) from the slot's index segment,
+    insert entries into visited, arm the extend budget."""
     M = state.top_ids.shape[1]
     V = state.visited.shape[1]
     ids, dists, visited_row = _seed_request(
-        db, qvec, entry_key, top_m=M, visited_slots=V,
+        db, qvec, entry_key, entry_lo, entry_hi, top_m=M, visited_slots=V,
         num_entries=num_entries, metric=metric)
     return EngineState(
         query_vecs=state.query_vecs.at[slot].set(qvec),
@@ -148,28 +179,31 @@ def admit(state: EngineState, db, slot, qvec, entry_key,
         visited=state.visited.at[slot].set(visited_row),
         active=state.active.at[slot].set(True),
         extends=state.extends.at[slot].set(0),
+        budget=state.budget.at[slot].set(budget),
     )
 
 
 @functools.partial(jax.jit, static_argnames=("num_entries", "metric"),
                    donate_argnums=(0,))
-def admit_many(state: EngineState, db, slots, qvecs, entry_keys,
-               num_entries: int = 16, metric: str = "l2"):
+def admit_many(state: EngineState, db, slots, qvecs, entry_keys, entry_los,
+               entry_his, budgets, num_entries: int = 16, metric: str = "l2"):
     """Batched ``admit``: seed a whole scheduler batch in one dispatch.
 
     slots (B,) int32 · qvecs (B, d) · entry_keys (B, 2) uint32 — one PRNG
     subkey per request (the host derives it by folding the request id into
     the engine key), so results are bit-identical to B sequential ``admit``
     calls in any order (asserted in tests; both paths vmap/call the shared
-    ``_seed_request``). Duplicate slots (the host pads batches by
+    ``_seed_request``). entry_los/entry_his/budgets (B,) int32 carry the
+    per-slot search params. Duplicate slots (the host pads batches by
     replicating row 0) scatter identical values and are safe.
     """
     M = state.top_ids.shape[1]
     V = state.visited.shape[1]
     seed = functools.partial(_seed_request, top_m=M, visited_slots=V,
                              num_entries=num_entries, metric=metric)
-    ids, dists, visited_rows = jax.vmap(lambda q, k: seed(db, q, k))(
-        qvecs, entry_keys)
+    ids, dists, visited_rows = jax.vmap(
+        lambda q, k, lo, hi: seed(db, q, k, lo, hi))(
+        qvecs, entry_keys, entry_los, entry_his)
     B = slots.shape[0]
     return EngineState(
         query_vecs=state.query_vecs.at[slots].set(qvecs),
@@ -179,6 +213,7 @@ def admit_many(state: EngineState, db, slots, qvecs, entry_keys,
         visited=state.visited.at[slots].set(visited_rows),
         active=state.active.at[slots].set(True),
         extends=state.extends.at[slots].set(jnp.zeros((B,), jnp.int32)),
+        budget=state.budget.at[slots].set(budgets),
     )
 
 
@@ -199,6 +234,8 @@ class SlotCheckpoint:
     expanded: np.ndarray  # (M,) bool
     visited: np.ndarray  # (V,) int32
     extends: int
+    budget: int = 0  # per-slot forced-completion budget (0 = off)
+    top_k: Optional[int] = None  # per-slot result truncation
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -210,7 +247,7 @@ def evict_slots(state: EngineState, slots):
     fields."""
     rows = (state.query_vecs[slots], state.top_ids[slots],
             state.top_dists[slots], state.expanded[slots],
-            state.visited[slots], state.extends[slots])
+            state.visited[slots], state.extends[slots], state.budget[slots])
     new_state = EngineState(
         query_vecs=state.query_vecs,
         top_ids=state.top_ids,
@@ -219,13 +256,14 @@ def evict_slots(state: EngineState, slots):
         visited=state.visited,
         active=state.active.at[slots].set(False),
         extends=state.extends,
+        budget=state.budget,
     )
     return new_state, rows
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def restore_slots(state: EngineState, slots, query_vecs, top_ids, top_dists,
-                  expanded, visited, extends):
+                  expanded, visited, extends, budgets):
     """Scatter checkpointed rows back into ``slots`` and reactivate them —
     the exact inverse of ``evict_slots``. Duplicate (padding) slots scatter
     identical values and are safe."""
@@ -237,6 +275,7 @@ def restore_slots(state: EngineState, slots, query_vecs, top_ids, top_dists,
         visited=state.visited.at[slots].set(visited),
         active=state.active.at[slots].set(True),
         extends=state.extends.at[slots].set(extends),
+        budget=state.budget.at[slots].set(budgets),
     )
 
 
@@ -312,15 +351,18 @@ def _extend_impl(state: EngineState, db, graph, *, p: int, task_batch: int,
     top_ids, top_dists, expanded = jax.vmap(_merge_topm)(
         state.top_ids, state.top_dists, expanded, cand_ids, dists)
 
-    # ---- stage 6: convergence = no parent was expandable ------------------
+    # ---- stage 6: convergence = no parent was expandable, OR the slot's
+    # extend budget is exhausted (forced completion: the budgeted extend
+    # still runs and merges before the slot exits) ---------------------------
     did_work = jnp.any(parent_ok, axis=1)
-    completed = state.active & ~did_work
-    new_active = state.active & did_work
     extends = state.extends + jnp.where(state.active & did_work, 1, 0)
+    over_budget = (state.budget > 0) & (extends >= state.budget)
+    completed = state.active & (~did_work | over_budget)
+    new_active = state.active & did_work & ~over_budget
     tasks_emitted = jnp.sum(task_ids >= 0)
 
     new_state = EngineState(state.query_vecs, top_ids, top_dists, expanded,
-                            visited, new_active, extends)
+                            visited, new_active, extends, state.budget)
     return new_state, completed, tasks_emitted
 
 
@@ -384,13 +426,19 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg, db: np.ndarray, graph: np.ndarray,
-                 use_pallas: Optional[bool] = None, seed: int = 0):
+                 use_pallas: Optional[bool] = None, seed: int = 0,
+                 corpus_rows: Optional[int] = None):
         self.cfg = cfg
         self.db = jnp.asarray(db)
         self.graph = jnp.asarray(graph)
+        # rows [0, corpus_n) are the frozen corpus segment; rows beyond are
+        # a growable segment (online inserts) that default admissions must
+        # not sample entry points from
+        self.corpus_n = db.shape[0] if corpus_rows is None else corpus_rows
         self.state = init_engine_state(cfg)
         self.free_slots = list(range(cfg.max_requests))[::-1]
         self.slot_request = {}  # slot -> request id
+        self.slot_topk = {}  # slot -> per-slot top-k truncation (optional)
         self.use_pallas = (jax.default_backend() == "tpu"
                            if use_pallas is None else use_pallas)
         self.distance_mode = cfg.distance_mode
@@ -419,17 +467,29 @@ class ContinuousBatchingEngine:
         # on/off benchmark arms return bit-identical result sets
         return jax.random.fold_in(self._key, int(request_id) & 0x7FFFFFFF)
 
-    def admit(self, request_id, qvec) -> int:
+    def _resolve_params(self, params: Optional[SlotParams]):
+        """(entry_lo, entry_hi, budget, top_k) with segment defaulting to
+        the frozen corpus rows."""
+        p = params or DEFAULT_PARAMS
+        hi = p.entry_hi if p.entry_hi > 0 else self.corpus_n
+        return p.entry_lo, hi, p.budget, p.top_k
+
+    def admit(self, request_id, qvec, params: Optional[SlotParams] = None) -> int:
         slot = self.free_slots.pop()
+        lo, hi, budget, top_k = self._resolve_params(params)
         self.state = admit(self.state, self.db, slot, jnp.asarray(qvec),
-                           self._entry_key(request_id),
+                           self._entry_key(request_id), jnp.int32(lo),
+                           jnp.int32(hi), jnp.int32(budget),
                            num_entries=min(16, self.cfg.top_m // 2),
                            metric=self.cfg.metric)
         self.slot_request[slot] = request_id
+        if top_k is not None:
+            self.slot_topk[slot] = top_k
         return slot
 
     def admit_batch(self, requests) -> List[int]:
-        """Admit ``[(request_id, qvec), ...]`` in ONE jitted dispatch.
+        """Admit ``[(request_id, qvec), ...]`` — optionally
+        ``(request_id, qvec, SlotParams)`` — in ONE jitted dispatch.
 
         Entry keys are folded in per request id (same derivation as
         ``admit``), and the batch is padded to a power-of-two bucket (by
@@ -438,23 +498,44 @@ class ContinuousBatchingEngine:
         bit-identical to sequential ``admit`` calls in any order."""
         if not requests:
             return []
+        requests = [r if len(r) == 3 else (r[0], r[1], None)
+                    for r in requests]
         B = len(requests)
         assert B <= len(self.free_slots), (B, len(self.free_slots))
         slots = [self.free_slots.pop() for _ in range(B)]
-        subs = [self._entry_key(rid) for rid, _ in requests]
+        subs = [self._entry_key(rid) for rid, _, _ in requests]
+        resolved = [self._resolve_params(p) for _, _, p in requests]
         b_pad = 1 << (B - 1).bit_length()
         pad = b_pad - B
         slots_p = np.asarray(slots + slots[:1] * pad, np.int32)
-        qvecs = np.stack([np.asarray(q, np.float32) for _, q in requests])
+        qvecs = np.stack([np.asarray(q, np.float32) for _, q, _ in requests])
         qvecs_p = np.concatenate([qvecs] + [qvecs[:1]] * pad) if pad else qvecs
         keys_p = jnp.stack(subs + subs[:1] * pad)
+        pcols = np.asarray([r[:3] for r in resolved], np.int32)
+        pcols_p = np.concatenate([pcols] + [pcols[:1]] * pad) if pad else pcols
         self.state = admit_many(self.state, self.db, jnp.asarray(slots_p),
                                 jnp.asarray(qvecs_p), keys_p,
+                                jnp.asarray(pcols_p[:, 0]),
+                                jnp.asarray(pcols_p[:, 1]),
+                                jnp.asarray(pcols_p[:, 2]),
                                 num_entries=min(16, self.cfg.top_m // 2),
                                 metric=self.cfg.metric)
-        for slot, (rid, _) in zip(slots, requests):
+        for slot, (rid, _, _), (_, _, _, top_k) in zip(slots, requests,
+                                                       resolved):
             self.slot_request[slot] = rid
+            if top_k is not None:
+                self.slot_topk[slot] = top_k
         return slots
+
+    def set_index(self, db, graph, corpus_rows: Optional[int] = None):
+        """Swap in grown index arrays (online inserts). In-flight searches
+        simply see the new rows on their next extend — semantically a
+        regular ANN index update. A capacity growth (shape change) costs
+        one fresh jit specialisation, bounded O(log capacity) times."""
+        self.db = jnp.asarray(db)
+        self.graph = jnp.asarray(graph)
+        if corpus_rows is not None:
+            self.corpus_n = corpus_rows
 
     def preempt(self, request_ids) -> List[Tuple[int, SlotCheckpoint]]:
         """Evict the slots running ``request_ids``: one jitted gather
@@ -471,13 +552,14 @@ class ContinuousBatchingEngine:
         slots_p = jnp.asarray(np.asarray(slots + slots[:1] * pad, np.int32))
         self.state, rows = evict_slots(self.state, slots_p)
         rows = jax.device_get(rows)  # the one host sync per preemption
-        qv, ids, dists, exp, vis, ext = (np.asarray(r) for r in rows)
+        qv, ids, dists, exp, vis, ext, bud = (np.asarray(r) for r in rows)
         out = []
         for i, (rid, slot) in enumerate(zip(request_ids, slots)):
             out.append((rid, SlotCheckpoint(
                 query_vec=qv[i].copy(), top_ids=ids[i].copy(),
                 top_dists=dists[i].copy(), expanded=exp[i].copy(),
-                visited=vis[i].copy(), extends=int(ext[i]))))
+                visited=vis[i].copy(), extends=int(ext[i]),
+                budget=int(bud[i]), top_k=self.slot_topk.pop(slot, None))))
             del self.slot_request[slot]
             self.free_slots.append(slot)
         return out
@@ -503,9 +585,13 @@ class ContinuousBatchingEngine:
             jnp.asarray(stack(lambda c: np.asarray(c.expanded, bool))),
             jnp.asarray(stack(lambda c: np.asarray(c.visited, np.int32))),
             jnp.asarray(stack(lambda c: np.int32(c.extends))),
+            jnp.asarray(stack(lambda c: np.int32(getattr(c, "budget", 0)))),
         )
-        for slot, (rid, _) in zip(slots, items):
+        for slot, (rid, ckpt) in zip(slots, items):
             self.slot_request[slot] = rid
+            top_k = getattr(ckpt, "top_k", None)
+            if top_k is not None:
+                self.slot_topk[slot] = top_k
         return slots
 
     def step_multi(self, num_steps: Optional[int] = None):
@@ -540,10 +626,11 @@ class ContinuousBatchingEngine:
             top_ids = np.asarray(self.state.top_ids)
             top_dists = np.asarray(self.state.top_dists)
             extends = np.asarray(self.state.extends)
-            kk = self.cfg.top_k
             for i in range(k):
                 for slot in np.nonzero(completed_k[i])[0]:
                     rid = self.slot_request.pop(int(slot))
+                    # per-slot top-k truncation (retrieval-class heterogeneity)
+                    kk = self.slot_topk.pop(int(slot), self.cfg.top_k)
                     out.append((rid, top_ids[slot, :kk].copy(),
                                 top_dists[slot, :kk].copy(),
                                 int(extends[slot]), i))

@@ -1,59 +1,156 @@
-"""Trinity §3.3: latency-aware two-queue scheduling for the vector pool.
+"""Trinity §3.3: latency-aware multi-lane scheduling for the vector pool.
 
-  · Q_pre  (prefill retrievals)  — EDF with slack  ddl − (t_now + Ẽ·T_ext),
-    short flush timeout τ_pre, first-class latency protection (TTFT).
-  · Q_dec  (decode RAG probes)   — FIFO, absorbs remaining capacity.
-  · Batch builder: N = free engine slots; reserve ⌈r·N⌉ for Q_pre with
-    unused share immediately donated to Q_dec; engine pads the remainder
-    with masked dummies (fixed kernel shape).
+Retrieval-class abstraction: the paper's motivating workload is
+heterogeneous — prefill context retrievals, decode RAG probes, semantic
+answer-cache lookups, online index inserts — all sharing one vector pool.
+Each workload is described by a :class:`RetrievalClass` (scheduling lane,
+default deadline, extend budget, per-class top-k, score threshold, index
+segment) instead of a hard-coded ``"prefill"``/``"decode"`` string. The
+scheduler owns a registry of classes and multiplexes three lanes:
+
+  · EDF lane        — slack-ordered  ddl − (t_now + Ẽ·T_ext), short flush
+    timeout τ_pre, first-class latency protection (TTFT). Default class:
+    ``prefill``.
+  · FIFO lane       — arrival order, absorbs remaining capacity. Default
+    class: ``decode``.
+  · background lane — deadline-less work (online index inserts) that only
+    fills slots left free by both foreground lanes and is preemptible by
+    ANY queued foreground work, not just urgent work.
+
+  · Batch builder: N = free engine slots; reserve ⌈r·N⌉ for the EDF lane
+    with unused share immediately donated to the FIFO lane; still-free
+    slots backfill EDF, then the background lane; engine pads the
+    remainder with masked dummies (fixed kernel shape).
   · Adaptive control loop (every control_interval): steer r and τ_pre from
     real-time feedback — KV-link utilisation u_kv vs target, prefill P95
     wait (TTFT proxy), decode RAG-stall fraction.
   · Stage-aware preemption (paper contribution 3): when the engine is full
-    and queued work is *urgent* (slack below ``preempt_slack_ms`` — decode
-    probes past their slack threshold, prefill probes about to blow TTFT),
-    ``plan_preemption`` picks victims among the running requests by LARGEST
-    remaining slack (they can best afford the round trip), skipping any
-    already preempted ``max_preemptions`` times (starvation cap) and any
-    whose own slack is within 2× the urgency threshold (evicting a request
-    that is itself about to miss only moves the miss around). Victims are
+    and queued work is *urgent* (slack below ``preempt_slack_ms``),
+    ``plan_preemption`` picks victims among the running requests by
+    LARGEST remaining slack (they can best afford the round trip),
+    skipping any already preempted ``max_preemptions`` times (starvation
+    cap) and any whose own slack is within 2× the urgency threshold.
+    Background-lane requests are victims of first resort: they are
+    evicted for any queued foreground request (deadline-less work has
+    infinite slack and is exempt from the starvation cap). Victims are
     re-queued via ``requeue_preempted`` with their engine checkpoint
-    attached at boosted priority — front of the decode FIFO, ahead of
-    non-checkpointed work in the prefill EDF sort — so they re-enter on the
-    next flush. ``VectorRequest.preemptions`` counts evictions and
-    ``resume_wait`` accumulates evicted time (preempt → re-admission).
+    attached at boosted priority so they re-enter on the next flush.
+
+With the default two-class table (``prefill``→EDF, ``decode``→FIFO) and
+no background submissions, every decision — ``select`` order,
+``plan_preemption`` victims, ``take_urgent`` picks, ``should_flush`` —
+is bit-identical to the pre-refactor two-queue scheduler; pinned against
+a recorded decision trace in tests/test_retrieval_classes.py.
 
 Knobs (configs/base.py VectorPoolConfig): ``preemption_enabled``,
-``preempt_slack_ms``, ``max_preemptions``.
+``preempt_slack_ms``, ``max_preemptions``, and the semantic-cache class
+parameters (``cache_*``, ``insert_budget``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from collections import deque
-from typing import List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# retrieval classes
+# ---------------------------------------------------------------------------
+
+LANES = ("edf", "fifo", "background")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalClass:
+    """One heterogeneous vector-search workload class.
+
+    The class replaces the raw ``kind`` string end-to-end: the scheduler
+    keys lane placement and urgency off it, the pool derives per-slot
+    engine search params (entry segment, extend budget, top-k truncation)
+    from it, and the cluster uses ``deadline_ms``/``score_threshold`` when
+    building probes.
+    """
+
+    name: str
+    lane: str  # "edf" | "fifo" | "background"
+    deadline_ms: Optional[float] = None  # None => deadline-less (background)
+    est_extends: float = 16.0  # Ẽ default for slack estimation
+    top_k: Optional[int] = None  # per-class result truncation (None = cfg)
+    extend_budget: int = 0  # forced completion after B extends (0 = off)
+    score_threshold: Optional[float] = None  # semantic-cache hit distance
+    segment: str = "corpus"  # entry-point segment: "corpus" | "cache"
+
+    def __post_init__(self):
+        if self.lane not in LANES:
+            raise ValueError(f"unknown lane {self.lane!r} (want one of "
+                             f"{LANES})")
+
+
+# The two classes that reproduce the pre-refactor trinity policy.
+PREFILL_CLASS = RetrievalClass("prefill", "edf")
+DECODE_CLASS = RetrievalClass("decode", "fifo")
+
+
+def build_registry(cfg) -> Dict[str, RetrievalClass]:
+    """Default retrieval-class table for a :class:`VectorPoolConfig`.
+
+    ``prefill``/``decode`` reproduce the two-queue trinity policy
+    bit-identically; ``cache_lookup``/``insert`` carry the semantic
+    answer-cache workload (lookup before prefill, online insert of the
+    answer embedding at completion).
+    """
+    return {c.name: c for c in (
+        RetrievalClass("prefill", "edf", cfg.prefill_deadline_ms),
+        RetrievalClass("decode", "fifo", cfg.decode_deadline_ms),
+        RetrievalClass("cache_lookup", "edf", cfg.prefill_deadline_ms,
+                       est_extends=float(cfg.cache_lookup_budget or 16),
+                       top_k=cfg.cache_top_k,
+                       extend_budget=cfg.cache_lookup_budget,
+                       score_threshold=cfg.cache_hit_threshold,
+                       segment="cache"),
+        RetrievalClass("insert", "background", None,
+                       est_extends=float(cfg.insert_budget or 16),
+                       top_k=cfg.graph_degree,
+                       extend_budget=cfg.insert_budget,
+                       segment="cache"),
+    )}
 
 
 @dataclasses.dataclass
 class VectorRequest:
     rid: int
-    kind: str  # "prefill" | "decode"
+    kind: str  # retrieval-class name; a RetrievalClass is also accepted
     qvec: np.ndarray
     t_arrival: float
-    deadline: float
+    deadline: Optional[float]  # None => deadline-less (background classes)
     est_extends: float = 16.0  # Ẽ
     t_admitted: Optional[float] = None
     t_completed: Optional[float] = None
     extends_used: int = 0
     result_ids: Optional[np.ndarray] = None
+    result_dists: Optional[np.ndarray] = None
+    # resolved retrieval class (stamped by the scheduler at submit when a
+    # plain class-name string was passed)
+    rclass: Optional[RetrievalClass] = dataclasses.field(
+        default=None, repr=False)
     # stage-aware preemption bookkeeping
     preemptions: int = 0  # times evicted so far (capped by max_preemptions)
     checkpoint: Optional[object] = None  # engine SlotCheckpoint while queued
     extends_done: int = 0  # extends already executed (stamped at eviction)
     t_preempted: Optional[float] = None
     resume_wait: float = 0.0  # total evicted time (preempt -> re-admission)
+
+    def __post_init__(self):
+        if isinstance(self.kind, RetrievalClass):
+            self.rclass = self.kind
+            self.kind = self.rclass.name
+
+    @property
+    def lane(self) -> str:
+        return self.rclass.lane if self.rclass is not None else (
+            "fifo" if self.kind == "decode" else "edf")
 
     @property
     def wait(self) -> float:
@@ -64,8 +161,13 @@ class VectorRequest:
         return self.t_admitted - self.t_arrival
 
 
-class PrefillQueue:
-    """EDF + slack-driven selection (exact O(n log n) over a short queue)."""
+# ---------------------------------------------------------------------------
+# lane queues (public iterate/remove APIs — no private reach-ins)
+# ---------------------------------------------------------------------------
+
+
+class EDFQueue:
+    """Slack-ordered (EDF) lane: exact O(n log n) over a short queue."""
 
     def __init__(self):
         self._items: List[VectorRequest] = []
@@ -73,8 +175,15 @@ class PrefillQueue:
     def push(self, r: VectorRequest):
         self._items.append(r)
 
-    def __len__(self):
+    def __len__(self) -> int:
         return len(self._items)
+
+    def __iter__(self) -> Iterator[VectorRequest]:
+        return iter(list(self._items))
+
+    def remove(self, reqs: Iterable[VectorRequest]) -> None:
+        drop = set(map(id, reqs))
+        self._items = [r for r in self._items if id(r) not in drop]
 
     def oldest_arrival(self) -> Optional[float]:
         return min((r.t_arrival for r in self._items), default=None)
@@ -93,7 +202,10 @@ class PrefillQueue:
         return out
 
 
-class DecodeQueue:
+class FIFOQueue:
+    """Arrival-ordered lane (also used for the background insert lane and
+    the ``fifo_shared`` baseline's single shared queue)."""
+
     def __init__(self):
         self._q: deque[VectorRequest] = deque()
 
@@ -104,11 +216,23 @@ class DecodeQueue:
         """Boosted re-queue for preempted requests: next pop wins."""
         self._q.appendleft(r)
 
-    def __len__(self):
+    def __len__(self) -> int:
         return len(self._q)
+
+    def __iter__(self) -> Iterator[VectorRequest]:
+        return iter(list(self._q))
+
+    def remove(self, reqs: Iterable[VectorRequest]) -> None:
+        drop = set(map(id, reqs))
+        self._q = deque(r for r in self._q if id(r) not in drop)
 
     def pop_fifo(self, n: int) -> List[VectorRequest]:
         return [self._q.popleft() for _ in range(min(n, len(self._q)))]
+
+
+# back-compat aliases (pre-refactor names)
+PrefillQueue = EDFQueue
+DecodeQueue = FIFOQueue
 
 
 @dataclasses.dataclass
@@ -150,31 +274,69 @@ class AdaptiveController:
         self.history.append((t_now, self.r, self.tau_pre))
 
 
-class TwoQueueScheduler:
-    """Builds (n_pre, n_dec) admission batches for the engine."""
+class LaneScheduler:
+    """Class-driven multi-lane scheduler: builds admission batches for the
+    engine from the EDF, FIFO and background lanes."""
 
-    def __init__(self, cfg, policy: str = "trinity"):
+    def __init__(self, cfg, policy: str = "trinity",
+                 classes: Optional[Dict[str, RetrievalClass]] = None):
         assert policy in ("trinity", "prefill_first", "decode_first",
                           "fifo_shared")
         self.cfg = cfg
         self.policy = policy
-        self.q_pre = PrefillQueue()
-        self.q_dec = DecodeQueue()
+        self.classes = dict(classes) if classes is not None \
+            else build_registry(cfg)
+        self.q_edf = EDFQueue()
+        self.q_fifo = FIFOQueue()
+        self.q_bg = FIFOQueue()
         self.controller = AdaptiveController(cfg)
         self.t_ext_ewma = 20e-6  # measured mean extend latency T_ext
-        self._shared_fifo: deque[VectorRequest] = deque()
+        self._shared_fifo = FIFOQueue()
+
+    # back-compat views (pre-refactor attribute names)
+    @property
+    def q_pre(self) -> EDFQueue:
+        return self.q_edf
+
+    @property
+    def q_dec(self) -> FIFOQueue:
+        return self.q_fifo
 
     # -- queue ops ---------------------------------------------------------
+    def register(self, rclass: RetrievalClass):
+        """Add (or replace) a retrieval class in the registry."""
+        self.classes[rclass.name] = rclass
+
+    def resolve(self, req: VectorRequest) -> RetrievalClass:
+        if req.rclass is None:
+            try:
+                req.rclass = self.classes[req.kind]
+            except KeyError:
+                raise KeyError(
+                    f"unknown retrieval class {req.kind!r}; registered: "
+                    f"{sorted(self.classes)}") from None
+        return req.rclass
+
     def submit(self, r: VectorRequest):
-        if self.policy == "fifo_shared":
-            self._shared_fifo.append(r)
-        elif r.kind == "prefill":
-            self.q_pre.push(r)
+        rclass = self.resolve(r)
+        if rclass.lane == "background":
+            # background work never rides the shared baseline queue: it
+            # must stay strictly behind foreground under every policy
+            self.q_bg.push(r)
+        elif self.policy == "fifo_shared":
+            self._shared_fifo.push(r)
+        elif rclass.lane == "edf":
+            self.q_edf.push(r)
         else:
-            self.q_dec.push(r)
+            self.q_fifo.push(r)
 
     def queued(self) -> int:
-        return len(self.q_pre) + len(self.q_dec) + len(self._shared_fifo)
+        """Foreground depth (the background lane is spare-capacity filler
+        and must not drive flush urgency or elastic scaling)."""
+        return len(self.q_edf) + len(self.q_fifo) + len(self._shared_fifo)
+
+    def queued_background(self) -> int:
+        return len(self.q_bg)
 
     def observe_extend_latency(self, t: float):
         self.t_ext_ewma = 0.9 * self.t_ext_ewma + 0.1 * t
@@ -184,25 +346,26 @@ class TwoQueueScheduler:
         if n_slots <= 0:
             return []
         if self.policy == "fifo_shared":
-            out = [self._shared_fifo.popleft()
-                   for _ in range(min(n_slots, len(self._shared_fifo)))]
+            out = self._shared_fifo.pop_fifo(n_slots)
         elif self.policy == "prefill_first":
-            out = self.q_pre.pop_by_slack(n_slots, t_now, self.t_ext_ewma)
-            out += self.q_dec.pop_fifo(n_slots - len(out))
+            out = self.q_edf.pop_by_slack(n_slots, t_now, self.t_ext_ewma)
+            out += self.q_fifo.pop_fifo(n_slots - len(out))
         elif self.policy == "decode_first":
-            out = self.q_dec.pop_fifo(n_slots)
-            out += self.q_pre.pop_by_slack(n_slots - len(out), t_now,
+            out = self.q_fifo.pop_fifo(n_slots)
+            out += self.q_edf.pop_by_slack(n_slots - len(out), t_now,
                                            self.t_ext_ewma)
         else:  # trinity
             r = self.controller.r
-            n_pre_res = min(math.ceil(r * n_slots), n_slots)
-            pre = self.q_pre.pop_by_slack(n_pre_res, t_now, self.t_ext_ewma)
-            # unused prefill share is immediately given to decode
-            dec = self.q_dec.pop_fifo(n_slots - len(pre))
-            # any still-free slots go back to prefill backlog
-            pre += self.q_pre.pop_by_slack(n_slots - len(pre) - len(dec),
+            n_edf_res = min(math.ceil(r * n_slots), n_slots)
+            pre = self.q_edf.pop_by_slack(n_edf_res, t_now, self.t_ext_ewma)
+            # unused EDF share is immediately given to the FIFO lane
+            dec = self.q_fifo.pop_fifo(n_slots - len(pre))
+            # any still-free slots go back to the EDF backlog
+            pre += self.q_edf.pop_by_slack(n_slots - len(pre) - len(dec),
                                            t_now, self.t_ext_ewma)
             out = pre + dec
+        # background fills whatever every foreground lane left free
+        out += self.q_bg.pop_fifo(n_slots - len(out))
         self._stamp_admitted(out, t_now)
         return out
 
@@ -218,38 +381,58 @@ class TwoQueueScheduler:
                running: bool = False) -> float:
         """Deadline slack: ddl − (t_now + remaining·T_ext). Extends already
         executed are credited — exactly for checkpointed requests (stamped
-        at eviction), elapsed-time estimated for running ones."""
+        at eviction), elapsed-time estimated for running ones. Deadline-less
+        (background-class) requests have infinite slack: never urgent,
+        always the first preemption victims."""
+        if r.deadline is None:
+            return math.inf
         done = float(r.extends_done)
         if running and r.t_admitted is not None:
             done += (t_now - r.t_admitted) / max(self.t_ext_ewma, 1e-9)
         rem = max(r.est_extends - done, 1.0)
         return r.deadline - (t_now + rem * self.t_ext_ewma)
 
+    def _foreground_queued(self) -> List[VectorRequest]:
+        return (list(self.q_edf) + list(self.q_fifo)
+                + list(self._shared_fifo))
+
     def urgent_queued(self, t_now: float) -> List[VectorRequest]:
-        """Queued requests whose slack is below the urgency threshold but
-        still rescuable (slack > −threshold): a request already doomed to
-        miss by more than the estimation margin gains nothing from an
-        eviction, so sustained overload must not churn healthy running
-        work on its behalf."""
+        """Queued foreground requests whose slack is below the urgency
+        threshold but still rescuable (slack > −threshold): a request
+        already doomed to miss by more than the estimation margin gains
+        nothing from an eviction, so sustained overload must not churn
+        healthy running work on its behalf."""
         thr = self.cfg.preempt_slack_ms / 1e3
-        queued = (self.q_pre._items + list(self.q_dec._q)
-                  + list(self._shared_fifo))
-        return [r for r in queued if -thr < self._slack(r, t_now) < thr]
+        return [r for r in self._foreground_queued()
+                if -thr < self._slack(r, t_now) < thr]
 
     def plan_preemption(self, t_now: float, in_flight) -> List[VectorRequest]:
-        """Victim selection when the engine is full: one victim per urgent
-        queued request, chosen by LARGEST running slack, skipping requests
-        at the ``max_preemptions`` cap (starvation guard) and requests whose
-        own slack is within 2× the urgency threshold. Returns [] when
-        preemption is disabled or nothing urgent is queued."""
+        """Victim selection when the engine is full.
+
+        Background-lane requests in flight are evicted first — one per
+        queued foreground request of any slack ("preemptible by
+        everything", no starvation cap: deadline-less work can always
+        wait). Beyond that, one foreground victim per *urgent* queued
+        request, chosen by LARGEST running slack, skipping requests at the
+        ``max_preemptions`` cap (starvation guard) and requests whose own
+        slack is within 2× the urgency threshold. Returns [] when
+        preemption is disabled or nothing justifies an eviction."""
         if not self.cfg.preemption_enabled:
             return []
+        bg_running = sorted(
+            (r for r in in_flight if r.lane == "background"),
+            key=lambda r: (r.extends_done, r.rid))
+        victims = bg_running[:self.queued()]
         urgent = self.urgent_queued(t_now)
-        if not urgent:
-            return []
+        n_more = len(urgent) - len(victims)
+        if n_more <= 0:
+            return victims
         thr = self.cfg.preempt_slack_ms / 1e3
+        taken = set(map(id, victims))
         cands = []
         for r in in_flight:
+            if id(r) in taken or r.lane == "background":
+                continue
             if r.preemptions >= self.cfg.max_preemptions:
                 continue
             s = self._slack(r, t_now, running=True)
@@ -257,25 +440,21 @@ class TwoQueueScheduler:
                 continue
             cands.append((s, r))
         cands.sort(key=lambda x: -x[0])
-        return [r for _, r in cands[:len(urgent)]]
+        return victims + [r for _, r in cands[:n_more]]
 
     def take_urgent(self, n: int, t_now: float) -> List[VectorRequest]:
         """Dequeue the ≤ n most-urgent queued requests (smallest slack below
-        the threshold) across both queues, bypassing the r-reservation —
-        used to seat urgent probes directly into preemption-freed slots, so
-        a boosted victim can never win its own slot back ahead of the work
-        it was evicted for."""
+        the threshold) across the foreground lanes, bypassing the
+        r-reservation — used to seat urgent probes directly into
+        preemption-freed slots, so a boosted victim can never win its own
+        slot back ahead of the work it was evicted for."""
         if n <= 0:
             return []
         urgent = sorted(((self._slack(r, t_now), r.rid, r)
                          for r in self.urgent_queued(t_now)))
         picked = [r for _, _, r in urgent[:n]]
-        drop = set(map(id, picked))
-        self.q_pre._items = [r for r in self.q_pre._items
-                             if id(r) not in drop]
-        self.q_dec._q = deque(r for r in self.q_dec._q if id(r) not in drop)
-        self._shared_fifo = deque(r for r in self._shared_fifo
-                                  if id(r) not in drop)
+        for lane in (self.q_edf, self.q_fifo, self._shared_fifo):
+            lane.remove(picked)
         self._stamp_admitted(picked, t_now)
         return picked
 
@@ -287,28 +466,36 @@ class TwoQueueScheduler:
         req.preemptions += 1
         req.t_preempted = t_now
         req.t_admitted = None
-        if self.policy == "fifo_shared":
-            self._shared_fifo.appendleft(req)
-        elif req.kind == "prefill":
-            self.q_pre.push(req)  # pop_by_slack boosts checkpointed items
+        if req.lane == "background":
+            self.q_bg.push_front(req)  # resumes ahead of fresh inserts
+        elif self.policy == "fifo_shared":
+            self._shared_fifo.push_front(req)
+        elif req.lane == "edf":
+            self.q_edf.push(req)  # pop_by_slack boosts checkpointed items
         else:
-            self.q_dec.push_front(req)
+            self.q_fifo.push_front(req)
 
     def should_flush(self, t_now: float, free_slots: int, active: int) -> bool:
-        """Launch/admit decision: full batch, τ_pre for urgent prefill, or
-        the global flush timeout."""
+        """Launch/admit decision: full batch, τ_pre for urgent EDF work, the
+        global flush timeout — or spare slots with background work queued
+        (inserts are pure capacity filler and admit greedily)."""
         if free_slots == 0:
             return False
         if self.queued() >= free_slots:
             return True
-        oldest_pre = self.q_pre.oldest_arrival()
-        if oldest_pre is not None and \
-                t_now - oldest_pre >= self.controller.tau_pre:
+        oldest_edf = self.q_edf.oldest_arrival()
+        if oldest_edf is not None and \
+                t_now - oldest_edf >= self.controller.tau_pre:
             return True
-        oldest = [r.t_arrival for r in
-                  list(self._shared_fifo) + self.q_pre._items
-                  + list(self.q_dec._q)]
+        oldest = [r.t_arrival for r in self._foreground_queued()]
         if oldest and t_now - min(oldest) >= self.cfg.tau_global_ms / 1e3:
+            return True
+        if len(self.q_bg) > 0:
             return True
         # keep the engine busy rather than idle if it has spare slots
         return active == 0 and self.queued() > 0
+
+
+# The pre-refactor name: the two-queue scheduler is the lane scheduler with
+# the default two-class table.
+TwoQueueScheduler = LaneScheduler

@@ -1,5 +1,20 @@
-"""The shared vector-search pool: engine replicas × two-queue scheduler ×
+"""The shared vector-search pool: engine replicas × multi-lane scheduler ×
 adaptive controller, advanced in (simulated or wall-clock) time.
+
+Retrieval classes: requests carry a class name resolved against the
+scheduler's registry (core/scheduler.py). The pool derives per-slot engine
+search params from the class — entry-point segment (frozen corpus vs
+growable cache), extend budget, top-k truncation — so heterogeneous
+workloads share the fixed-shape engine.
+
+Online index growth: the pool owns the authoritative
+``vector.online.OnlineIndex``. An insert is submitted as a deadline-less
+background-class request whose engine search (restricted to the cache
+segment) performs the neighbor selection; on completion the pool patches
+the index (``insert_batch``) and broadcasts the grown arrays to every
+replica engine (``engine.set_index`` — a buffer-pointer swap). Background
+inserts only fill slots the foreground lanes left free, and the scheduler
+evicts them for ANY queued foreground work.
 
 Pool-level features beyond the paper's minimum, needed at 1000-node scale:
   · data-parallel engine replicas with least-loaded dispatch,
@@ -37,9 +52,11 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import roofline_model
-from repro.core.continuous_batching import ContinuousBatchingEngine
+from repro.core.continuous_batching import (ContinuousBatchingEngine,
+                                            SlotParams)
 from repro.core.scheduler import (ControllerFeedback, TwoQueueScheduler,
                                   VectorRequest)
+from repro.vector.online import OnlineIndex
 
 
 @dataclasses.dataclass
@@ -52,6 +69,8 @@ class PoolMetrics:
     preemptions: int = 0  # slot evictions
     resumes: int = 0  # checkpointed requests re-seated
     preempt_time: float = 0.0  # total evicted time across completed reqs
+    # online index growth
+    inserts: int = 0  # cache-segment nodes added
 
     def latencies(self, kind: Optional[str] = None) -> np.ndarray:
         xs = [r.t_completed - r.t_arrival for r in self.completed
@@ -68,11 +87,12 @@ class PoolMetrics:
 
 
 class _Replica:
-    def __init__(self, rid: int, cfg, db, graph, use_pallas, seed):
+    def __init__(self, rid: int, cfg, index: OnlineIndex, use_pallas, seed):
         self.rid = rid
-        self.engine = ContinuousBatchingEngine(cfg, db, graph,
+        self.engine = ContinuousBatchingEngine(cfg, index.db, index.graph,
                                                use_pallas=use_pallas,
-                                               seed=seed)
+                                               seed=seed,
+                                               corpus_rows=index.base_n)
         self.clock = 0.0
         self.ext_latency_ewma = roofline_model.extend_time(cfg)
         self.slowdown = 1.0  # >1 = straggling hardware
@@ -85,16 +105,25 @@ class VectorPool:
                  policy: str = "trinity", use_pallas: Optional[bool] = None,
                  min_replicas: int = 1, max_replicas: int = 8,
                  straggler_factor: float = 2.5, elastic: bool = False,
-                 seed: int = 0):
+                 classes=None, seed: int = 0):
         self.cfg = cfg
-        self.db = db
+        self.db = db  # frozen corpus (np view; device arrays live in index)
         self.graph = graph
-        self.scheduler = TwoQueueScheduler(cfg, policy=policy)
+        self.index = OnlineIndex(
+            db, graph, metric=cfg.metric,
+            cache_capacity=(cfg.cache_capacity
+                            if cfg.semantic_cache_enabled else 0))
+        self.scheduler = TwoQueueScheduler(cfg, policy=policy,
+                                           classes=classes)
         self.replicas: List[_Replica] = [
-            _Replica(i, cfg, db, graph, use_pallas, seed + i)
+            _Replica(i, cfg, self.index, use_pallas, seed + i)
             for i in range(replicas)]
         self._next_rid = replicas
         self.metrics = PoolMetrics()
+        # online inserts: pool-internal rid space + answer-cache metadata
+        self._insert_rid = 1 << 28
+        self._insert_meta: Dict[int, object] = {}
+        self.cache_meta: Dict[int, object] = {}  # filled row id -> payload
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
         self.straggler_factor = straggler_factor
@@ -112,6 +141,51 @@ class VectorPool:
         (event-driven semantics)."""
         heapq.heappush(self._pending, (req.t_arrival, self._pending_seq, req))
         self._pending_seq += 1
+
+    @property
+    def cache_size(self) -> int:
+        return self.index.cache_size
+
+    def submit_insert(self, vec, meta=None, t_now: float = 0.0):
+        """Insert ``vec`` into the growable cache segment.
+
+        With an empty segment there is nothing to search, so the node is
+        placed synchronously; otherwise the insert rides the scheduler as
+        a deadline-less background-class request whose search performs the
+        neighbor selection. Returns the row id for a synchronous insert,
+        None when queued (``cache_meta`` maps row → ``meta`` once filled).
+        """
+        vec = np.asarray(vec, np.float32)
+        if self.index.cache_size == 0:
+            return self._apply_insert(vec, None, meta)
+        rid = self._insert_rid
+        self._insert_rid += 1
+        self._insert_meta[rid] = meta
+        self.submit(VectorRequest(rid, "insert", vec, t_now, None))
+        return None
+
+    def _apply_insert(self, vec, neighbor_ids, meta):
+        """Patch the index and broadcast the grown arrays to every replica
+        (must happen immediately: engines alias the index buffers)."""
+        row = self.index.insert(vec, neighbor_ids)
+        if meta is not None:
+            self.cache_meta[row] = meta
+        self.metrics.inserts += 1
+        for rep in self.replicas:
+            rep.engine.set_index(self.index.db, self.index.graph)
+        return row
+
+    def _params_for(self, req: VectorRequest) -> Optional[SlotParams]:
+        """Per-slot engine search params derived from the request's
+        retrieval class; None (engine defaults) for plain corpus classes —
+        keeps the default two-class table on the exact pre-refactor path."""
+        rc = req.rclass
+        if rc is None or (rc.segment == "corpus" and rc.extend_budget == 0
+                          and rc.top_k is None):
+            return None
+        lo, hi = self.index.entry_range(rc.segment)
+        return SlotParams(top_k=rc.top_k, budget=rc.extend_budget,
+                          entry_lo=lo, entry_hi=hi)
 
     def _release_pending(self, t_now: float):
         while self._pending and self._pending[0][0] <= t_now:
@@ -141,8 +215,8 @@ class VectorPool:
             self.scheduler.submit(req)
 
     def add_replica(self):
-        self.replicas.append(_Replica(self._next_rid, self.cfg, self.db,
-                                      self.graph, self._use_pallas,
+        self.replicas.append(_Replica(self._next_rid, self.cfg, self.index,
+                                      self._use_pallas,
                                       self._seed + self._next_rid))
         self.replicas[-1].clock = max(r.clock for r in self.replicas[:-1])
         self._next_rid += 1
@@ -163,7 +237,8 @@ class VectorPool:
         fresh = [r for r in batch if r.checkpoint is None]
         resumed = [r for r in batch if r.checkpoint is not None]
         if fresh:
-            rep.engine.admit_batch([(r.rid, r.qvec) for r in fresh])
+            rep.engine.admit_batch([(r.rid, r.qvec, self._params_for(r))
+                                    for r in fresh])
         if resumed:
             rep.engine.resume_batch([(r.rid, r.checkpoint) for r in resumed])
             for req in resumed:
@@ -234,6 +309,11 @@ class VectorPool:
             req.t_completed = t + (substep + 1) * dt
             req.extends_used = extends
             req.result_ids = ids
+            req.result_dists = dists
+            if req.kind == "insert":
+                # the finished background search IS the neighbor selection
+                self._apply_insert(req.qvec, ids,
+                                   self._insert_meta.pop(rid, None))
             self.metrics.preempt_time += req.resume_wait
             self.metrics.completed.append(req)
 

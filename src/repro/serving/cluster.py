@@ -5,7 +5,18 @@ All device-level math (engines, kernels, models) is real JAX elsewhere;
 here queueing, links, failures and the closed control loop (u_kv, prefill
 P95 wait, decode stalls → adaptive r/τ_pre) evolve in simulated time with
 latencies from the calibrated roofline timing model. This is the harness
-behind benchmarks/bench_architectures.py and bench_scheduler.py.
+behind benchmarks/bench_architectures.py, bench_scheduler.py and
+bench_semantic_cache.py.
+
+Semantic answer cache (``pool_cfg.semantic_cache_enabled``): arrivals
+first probe the vector pool with a ``cache_lookup``-class request over the
+prompt embedding. A hit under the class score threshold serves the cached
+answer immediately — no prefill, no KV transfer, no decode (TTFT = lookup
+round trip; ``cache_hits``/``saved_prefill_tokens`` count the win). A miss
+takes the normal PD path and, at completion, asynchronously inserts the
+(prompt embedding → answer) pair into the pool's growable cache segment as
+a deadline-less background-class request. Requests sharing a
+``prompt_id`` embed identically, so repeated prompts hit.
 
 Fault tolerance at pool level:
   · kill_prefill/kill_decode at time t — in-flight work re-queues; decode
@@ -79,7 +90,6 @@ class ClusterSim:
         self._events: list = []
         self._eseq = itertools.count()
         self._probe_cb: Dict[int, Callable] = {}
-        self._probe_rid = itertools.count(1 << 20)
         self._pool_cursor = 0
         self._recent_stalls: deque = deque(maxlen=256)
         self.t_now = 0.0
@@ -100,18 +110,71 @@ class ClusterSim:
         self._collect_pool_completions()
 
     # ------------------------------------------------------------ arrival
+    @property
+    def _cache_enabled(self) -> bool:
+        return (self.pool_cfg is not None
+                and self.pool_cfg.semantic_cache_enabled)
+
     def arrive(self, req: GenRequest):
         def _on_arrival():
-            if req.prefill_rag and self.pool_cfg is not None:
-                self._submit_probe(req, "prefill", self._after_prefill_rag)
+            # answer-cache lookup gates the whole PD pipeline; an empty
+            # cache segment is a guaranteed (and free) miss
+            if self._cache_enabled and self.vector_pool.cache_size > 0:
+                self._submit_probe(req, "cache_lookup",
+                                   self._after_cache_lookup)
             else:
-                self._enqueue_prefill(req)
+                self._start_miss_path(req)
 
         self.schedule(req.t_arrival, _on_arrival)
+
+    def _start_miss_path(self, req: GenRequest):
+        """The pre-cache arrival path: prefill RAG probe, then prefill."""
+        if req.prefill_rag and self.pool_cfg is not None:
+            self._submit_probe(req, "prefill", self._after_prefill_rag)
+        else:
+            self._enqueue_prefill(req)
 
     def _after_prefill_rag(self, req: GenRequest, vreq: VectorRequest):
         req.t_retrieval_done = self.t_now
         self._enqueue_prefill(req)
+
+    # ----------------------------------------------------- semantic cache
+    def _after_cache_lookup(self, req: GenRequest, vreq: VectorRequest):
+        req.t_cache_done = self.t_now
+        thr = self.vector_pool.scheduler.classes["cache_lookup"] \
+            .score_threshold
+        meta = None
+        if vreq.result_ids is not None and vreq.result_dists is not None:
+            for row, dist in zip(vreq.result_ids, vreq.result_dists):
+                if float(dist) <= thr:
+                    meta = self.vector_pool.cache_meta.get(int(row))
+                    if meta is not None:
+                        break
+        if meta is None:
+            self._start_miss_path(req)
+            return
+        # hit: serve the cached answer — the entire prefill→KV→decode
+        # pipeline is skipped; TTFT is the lookup round trip
+        req.cache_hit = True
+        req.tokens_out = int(meta["tokens"])
+        req.t_first_token = self.t_now
+        req.t_done = self.t_now
+        self.metrics.cache_hits += 1
+        self.metrics.saved_prefill_tokens += req.prompt_len
+        self.metrics.finished.append(req)
+
+    def _finish_generation(self, req: GenRequest):
+        """Completion hook: async-insert the (prompt embedding → answer)
+        pair as a background-class request (cache misses only)."""
+        req.t_done = self.t_now
+        self.metrics.finished.append(req)
+        if self._cache_enabled:
+            self.vector_pool.submit_insert(
+                self._prompt_embedding(req),
+                meta={"tokens": req.tokens_out,
+                      "prompt_id": req.prompt_id
+                      if req.prompt_id is not None else req.rid},
+                t_now=self.t_now)
 
     # ------------------------------------------------------------ prefill
     def _enqueue_prefill(self, req: GenRequest):
@@ -173,9 +236,17 @@ class ClusterSim:
         if self.elastic_decode and len(self.decode_queue) > 4 * max(
                 1, len(self.decode_pool)) and \
                 len(self.decode_pool) < self.max_decode_instances:
+            # scaled-up instances get the SAME placement-derived capacity
+            # loss / HBM contention / EP penalty as the initial pool —
+            # colocated placements must not gain anomalously fast replicas
+            pl = self.placement
             self.decode_pool.append(DecodeInstance(
                 len(self.decode_pool), self.cfg, self._chips,
-                max_batch=self.decode_pool[0].max_batch, hw=self.hw))
+                max_batch=self.decode_pool[0].max_batch, hw=self.hw,
+                capacity_factor=pl.llm_capacity_factor_decode,
+                contention=(pl.hbm_contention_factor
+                            if pl.llm_capacity_factor_decode < 1 else 1.0),
+                ep_penalty=pl.ep_dispatch_penalty))
 
     def _decode_step(self, inst: DecodeInstance):
         if not inst.health.alive:
@@ -196,9 +267,8 @@ class ClusterSim:
             if req.tokens_out >= req.max_new_tokens:
                 done.append(req)
         for req in done:
-            req.t_done = self.t_now
             inst.release(req)
-            self.metrics.finished.append(req)
+            self._finish_generation(req)
         if inst.active:
             self.schedule(self.t_now + inst.step_time(self.t_now),
                           lambda: self._decode_step(inst))
@@ -213,14 +283,33 @@ class ClusterSim:
         self._recent_stalls.append(stall)
 
     # ------------------------------------------------------- vector pool
+    # probe rid spaces per retrieval class: rids derive from the GENERATION
+    # request identity, so probe streams (and the engine entry keys folded
+    # from them) are reproducible across runs/arms even when another class
+    # (cache lookups) adds or removes probes in between. Windows are sized
+    # so classes can never collide with each other or with the pool's
+    # insert rid space (1 << 28): base + rid·4096 + tokens_out < base + 2³²
+    _PROBE_RID_BASE = {"prefill": 1 << 32, "decode": 2 << 32,
+                       "cache_lookup": 3 << 32}
+
+    def _probe_rid(self, req: GenRequest, kind: str) -> int:
+        if req.rid >= (1 << 20) or req.tokens_out >= 4096:
+            raise ValueError(
+                f"probe rid window exceeded (rid={req.rid}, "
+                f"tokens_out={req.tokens_out}); widen _PROBE_RID_BASE")
+        return self._PROBE_RID_BASE[kind] + req.rid * 4096 + req.tokens_out
+
     def _submit_probe(self, req: GenRequest, kind: str, cb: Callable):
-        rtt = (self.placement.prefill_rtt if kind == "prefill"
-               else self.placement.decode_rtt)
-        rid = next(self._probe_rid)
-        ddl = self.t_now + (self.pool_cfg.prefill_deadline_ms if kind == "prefill"
-                            else self.pool_cfg.decode_deadline_ms) / 1e3
-        qvec = self._query_for(req)
-        vreq = VectorRequest(rid, kind, qvec, self.t_now + rtt / 2, ddl)
+        rclass = self.vector_pool.scheduler.classes[kind]
+        # cache lookups are issued from the request front-end, prefill-side
+        rtt = (self.placement.decode_rtt if kind == "decode"
+               else self.placement.prefill_rtt)
+        rid = self._probe_rid(req, kind)
+        ddl = self.t_now + rclass.deadline_ms / 1e3
+        qvec = (self._prompt_embedding(req) if kind == "cache_lookup"
+                else self._query_for(req))
+        vreq = VectorRequest(rid, kind, qvec, self.t_now + rtt / 2, ddl,
+                             est_extends=rclass.est_extends)
         self._probe_cb[rid] = (req, cb, rtt)
         self.vector_pool.submit(vreq)
 
@@ -230,6 +319,17 @@ class ClusterSim:
         base = self.vector_pool.db[rng.integers(0, n)]
         return np.asarray(base) + rng.normal(0, 0.1, size=base.shape).astype(
             np.float32)
+
+    def _prompt_embedding(self, req: GenRequest) -> np.ndarray:
+        """Deterministic per-prompt embedding: requests sharing a
+        ``prompt_id`` embed identically (repeats of one prompt), so a
+        cached answer's embedding is bit-equal to its repeat lookups."""
+        pid = req.prompt_id if req.prompt_id is not None else req.rid
+        rng = np.random.default_rng(0xC0FFEE + pid * 7919)
+        n = self.vector_pool.db.shape[0]
+        base = self.vector_pool.db[rng.integers(0, n)]
+        return (np.asarray(base, np.float32)
+                + rng.normal(0, 0.05, size=base.shape)).astype(np.float32)
 
     def _poll_pool(self):
         self.vector_pool.run_until(self.t_now)

@@ -15,7 +15,12 @@ class GenRequest:
     t_arrival: float
     rag_interval: int = 0  # Δ: decode RAG probe every Δ tokens (0 = off)
     prefill_rag: bool = True
+    # semantic answer cache: requests sharing a prompt_id are repeats of
+    # the same prompt (identical embedding); None => unique (rid)
+    prompt_id: Optional[int] = None
+    cache_hit: bool = False  # served from the answer cache (no PD pipeline)
     # lifecycle timestamps
+    t_cache_done: Optional[float] = None  # answer-cache lookup returned
     t_retrieval_done: Optional[float] = None
     t_prefill_start: Optional[float] = None
     t_prefill_done: Optional[float] = None
@@ -53,11 +58,20 @@ class ClusterMetrics:
     # vector-pool stage-aware preemption (stamped by ClusterSim)
     pool_preemptions: int = 0
     pool_resumes: int = 0
+    # semantic answer cache
+    cache_hits: int = 0
+    saved_prefill_tokens: int = 0  # prompt tokens never prefilled (hits)
 
     def summary(self, t_elapsed: float) -> dict:
         fin = self.finished
         toks = sum(r.tokens_out for r in fin)
-        decode_time = sum((r.t_done or 0) - (r.t_first_token or 0) for r in fin)
+        # only requests that actually decoded contribute decode time: a
+        # request may carry t_done without t_first_token (cache hits served
+        # without a decode pass, failure edge cases) and (t_done or 0) −
+        # (t_first_token or 0) would go negative and skew decode_stall_frac
+        decode_time = sum(r.t_done - r.t_first_token for r in fin
+                          if r.t_done is not None
+                          and r.t_first_token is not None)
         stall = sum(r.stall_time for r in fin)
         return {
             "requests": len(fin),
@@ -70,4 +84,7 @@ class ClusterMetrics:
             "re_prefills": sum(r.re_prefills for r in fin),
             "pool_preemptions": self.pool_preemptions,
             "pool_resumes": self.pool_resumes,
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hits / max(len(fin), 1),
+            "saved_prefill_tokens": self.saved_prefill_tokens,
         }

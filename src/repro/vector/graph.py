@@ -82,7 +82,8 @@ def build_knn_graph_nndescent(db: np.ndarray, k: int, iters: int = 8,
 
 
 def make_cagra_graph(db: np.ndarray, degree: int, exact_threshold: int = 20000,
-                     seed: int = 0, long_edges: int = 2) -> np.ndarray:
+                     seed: int = 0, long_edges: int = 2,
+                     id_offset: int = 0) -> np.ndarray:
     """Fixed-degree search graph: build 2D-degree kNN, add reverse edges,
     prune by rank to ``degree`` (simplified CAGRA optimisation pass).
 
@@ -92,6 +93,11 @@ def make_cagra_graph(db: np.ndarray, degree: int, exact_threshold: int = 20000,
     (CAGRA gets navigability from its rank-based reordering over an
     NN-descent graph whose boundary errors leak across clusters; with an
     exact kNN graph we must inject the shortcuts explicitly.)
+
+    ``id_offset`` shifts every adjacency id by a constant: build a graph
+    over a *segment* of a larger capacity index (rows
+    [offset, offset+N)) directly in global id space — the rebuilt-graph
+    oracle that online inserts (vector/online.py) are scored against.
     """
     N = db.shape[0]
     rng = np.random.default_rng(seed + 1)
@@ -113,4 +119,4 @@ def make_cagra_graph(db: np.ndarray, degree: int, exact_threshold: int = 20000,
     for o in orphans:
         tgt = knn[o, 0]
         G[tgt, short - 1] = o
-    return G.astype(np.int32)
+    return (G + id_offset).astype(np.int32)

@@ -1,0 +1,150 @@
+"""Deterministic scheduler workload used to pin refactor bit-identity.
+
+The driver exercises the scheduler's full public decision surface —
+``submit``/``select``/``plan_preemption``/``requeue_preempted``/
+``take_urgent``/``should_flush`` plus the adaptive controller — through a
+fixed synthetic mixed prefill/decode workload, and records every decision
+(the exact request-id lists returned) as a JSON-serializable log.
+
+``tests/data/scheduler_trace.json`` was recorded by running this driver
+against the PRE-refactor two-queue scheduler (PR 2 state, commit e66cc6c).
+``tests/test_retrieval_classes.py`` replays the identical workload through
+the current scheduler with the default two-class table and asserts the
+decision log matches bit-for-bit: the retrieval-class refactor must change
+no baseline behavior.
+
+Regenerate (only if the workload itself changes, never to paper over a
+behavior change):
+    PYTHONPATH=src:tests python -m scheduler_trace_driver
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+DATA_PATH = os.path.join(os.path.dirname(__file__), "data",
+                         "scheduler_trace.json")
+
+
+class _Ckpt:
+    """Minimal stand-in for an engine SlotCheckpoint (only ``extends`` is
+    read by the scheduler)."""
+
+    def __init__(self, extends: int):
+        self.extends = extends
+
+
+def _mk_request(make_request, rid, kind, t, ddl, est):
+    qvec = np.zeros(4, np.float32)
+    return make_request(rid, kind, qvec, t, ddl, est)
+
+
+def run_trace(scheduler_factory, make_request, policy: str = "trinity"):
+    """Drive one scheduler instance through the fixed workload.
+
+    ``scheduler_factory(policy)`` returns a fresh scheduler;
+    ``make_request(rid, kind, qvec, t_arrival, deadline, est_extends)``
+    returns whatever request object that scheduler accepts. Returns the
+    decision log as a list of (op, payload) entries.
+    """
+    from repro.core.scheduler import ControllerFeedback
+
+    sched = scheduler_factory(policy)
+    sched.t_ext_ewma = 100e-6  # deterministic slack arithmetic
+    rng = np.random.default_rng(1234)
+    log = []
+    in_flight = []
+    rid = 0
+    t = 0.0
+
+    for step in range(160):
+        t = round(step * 0.4e-3, 9)
+
+        # -- arrivals: deterministic mixed stream --------------------------
+        n_arrive = int(rng.integers(0, 5))
+        for _ in range(n_arrive):
+            kind = "prefill" if rng.random() < 0.45 else "decode"
+            # spread of deadlines: some urgent, some relaxed, some doomed
+            ddl_ms = float(rng.choice([1.2, 2.5, 6.0, 25.0, 100.0, -1.0]))
+            est = float(rng.choice([4.0, 10.0, 16.0, 40.0]))
+            req = _mk_request(make_request, rid, kind, t, t + ddl_ms / 1e3,
+                              est)
+            sched.submit(req)
+            rid += 1
+
+        # -- controller tick ----------------------------------------------
+        fb = ControllerFeedback(
+            u_kv=float(rng.random()),
+            prefill_p95_wait=float(rng.random() * 0.01),
+            decode_stall_frac=float(rng.random() * 0.3))
+        sched.controller.maybe_update(t, fb)
+        log.append(["controller", [round(sched.controller.r, 9),
+                                   round(sched.controller.tau_pre, 9)]])
+
+        # -- flush decision + urgency surface ------------------------------
+        free = int(rng.integers(0, 9))
+        active = int(rng.integers(0, 6))
+        log.append(["should_flush",
+                    bool(sched.should_flush(t, free, active))])
+        log.append(["urgent", sorted(r.rid for r in sched.urgent_queued(t))])
+
+        # -- preemption planning against the fake in-flight set ------------
+        victims = sched.plan_preemption(t, in_flight)
+        log.append(["victims", [r.rid for r in victims]])
+        for v in victims:
+            in_flight.remove(v)
+            sched.requeue_preempted(v, _Ckpt(extends=int(v.rid) % 7), t)
+
+        # -- seat urgent work into "freed" slots every few rounds ----------
+        if step % 7 == 3:
+            got = sched.take_urgent(len(victims) + 1, t)
+            log.append(["take_urgent", [r.rid for r in got]])
+            in_flight.extend(got)
+
+        # -- the main admission decision ------------------------------------
+        picked = sched.select(free, t)
+        log.append(["select", [r.rid for r in picked]])
+        in_flight.extend(picked)
+
+        # -- complete the longest-running half of in-flight -----------------
+        in_flight.sort(key=lambda r: (r.t_admitted, r.rid))
+        n_done = len(in_flight) // 2
+        done, in_flight = in_flight[:n_done], in_flight[n_done:]
+        log.append(["completed", sorted(r.rid for r in done)])
+
+        sched.observe_extend_latency(float(80e-6 + 40e-6 * rng.random()))
+
+    log.append(["queued_final", sched.queued()])
+    return log
+
+
+def record():
+    """Record the trace with the repo's current scheduler (run this ONLY
+    against the pre-refactor baseline)."""
+    from repro.configs.base import VectorPoolConfig
+    from repro.core.scheduler import TwoQueueScheduler, VectorRequest
+
+    cfg = dataclasses.replace(VectorPoolConfig(), preemption_enabled=True,
+                              preempt_slack_ms=2.0, max_preemptions=2)
+
+    def factory(policy):
+        return TwoQueueScheduler(cfg, policy=policy)
+
+    def make_request(rid, kind, qvec, t, ddl, est):
+        return VectorRequest(rid, kind, qvec, t, ddl, est_extends=est)
+
+    out = {policy: run_trace(factory, make_request, policy)
+           for policy in ("trinity", "prefill_first", "decode_first",
+                          "fifo_shared")}
+    os.makedirs(os.path.dirname(DATA_PATH), exist_ok=True)
+    with open(DATA_PATH, "w") as f:
+        json.dump(out, f, sort_keys=True)
+    sizes = {k: len(v) for k, v in out.items()}
+    print(f"wrote {DATA_PATH}: {sizes}")
+
+
+if __name__ == "__main__":
+    record()

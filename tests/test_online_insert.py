@@ -1,0 +1,186 @@
+"""Online index growth (vector/online.py): insert-batch mechanics, segment
+disjointness, and recall vs the rebuilt-from-scratch graph oracle."""
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.continuous_batching import ContinuousBatchingEngine, SlotParams
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import VectorPool
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+from repro.vector.online import OnlineIndex
+from repro.vector.ref import exact_knn, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(1500, 64, num_clusters=12, num_queries=128,
+                               seed=3)
+    graph = make_cagra_graph(db, degree=16, seed=3)
+    cfg = VectorPoolConfig(num_vectors=1500, dim=64, graph_degree=16,
+                           max_requests=16, top_m=32, parents_per_step=2,
+                           task_batch=2048, visited_slots=512, top_k=10,
+                           semantic_cache_enabled=True, cache_capacity=64,
+                           insert_budget=16)
+    # vectors to insert: a fresh clustered set (same generator family)
+    new_vecs, seg_queries = make_dataset(300, 64, num_clusters=12,
+                                         num_queries=64, seed=17)
+    return cfg, db, graph, queries, new_vecs, seg_queries
+
+
+# ---------------------------------------------------------------------------
+# OnlineIndex mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_segmented_growth(setup):
+    cfg, db, graph, *_ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=0)
+    assert idx.cache_capacity == 0 and idx.db.shape[0] == 1500
+    rng = np.random.default_rng(0)
+    shapes = {idx.db.shape[0]}
+    for i in range(140):
+        idx.insert(rng.normal(size=64).astype(np.float32))
+        shapes.add(idx.db.shape[0])
+    assert idx.cache_size == 140
+    # doubling segments: few distinct shapes, never per-insert realloc
+    assert len(shapes) <= 4
+    assert idx.cache_capacity >= 140
+    lo, hi = idx.entry_range("cache")
+    assert (lo, hi) == (1500, 1640)
+    assert idx.entry_range("corpus") == (0, 1500)
+
+
+def test_insert_preserves_corpus_rows(setup):
+    cfg, db, graph, *_ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16)
+    rng = np.random.default_rng(1)
+    for _ in range(40):  # forces one growth past 16
+        idx.insert(rng.normal(size=64).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(idx.db)[:1500], db)
+    np.testing.assert_array_equal(np.asarray(idx.graph)[:1500], graph)
+
+
+def test_reverse_edge_patch_degree_cap(setup):
+    """Reverse edges fill empty slots first, then replace only worse
+    (longer) edges — out-degree never exceeds D and never worsens."""
+    cfg, db, graph, *_ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=64)
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=64).astype(np.float32)
+    anchor = idx.insert(base)
+    # a ring of close nodes all naming the anchor as neighbor
+    rows = [anchor]
+    for i in range(40):
+        v = base + rng.normal(0, 0.1, size=64).astype(np.float32)
+        rows.append(idx.insert(v, neighbor_ids=rows))
+    g = np.asarray(idx.graph)
+    D = g.shape[1]
+    adj = g[anchor]
+    assert adj.shape == (D,)
+    valid = adj[adj >= 0]
+    assert len(valid) <= D
+    assert len(np.unique(valid)) == len(valid)  # no duplicate edges
+    assert all(1500 <= int(v) < idx.total_rows for v in valid)  # in-segment
+
+
+def test_insert_batch_padding_rows_dropped(setup):
+    cfg, db, graph, *_ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16)
+    rng = np.random.default_rng(3)
+    rows = idx.insert_many(
+        [rng.normal(size=64).astype(np.float32) for _ in range(3)],
+        [None, None, None])  # B=3 pads to 4 internally
+    assert rows == [1500, 1501, 1502]
+    assert idx.cache_size == 3
+
+
+# ---------------------------------------------------------------------------
+# pool-level background inserts
+# ---------------------------------------------------------------------------
+
+
+def _grow_via_pool(cfg, db, graph, new_vecs, t_gap=2e-4):
+    pool = VectorPool(cfg, db, graph, replicas=1, policy="trinity",
+                      use_pallas=False, seed=0)
+    t = 0.0
+    for v in new_vecs:
+        pool.submit_insert(v, t_now=t)
+        t += t_gap
+        pool.run_until(t)
+    pool.run_until(t + 1.0)
+    return pool
+
+
+def test_pool_background_insert_path(setup):
+    cfg, db, graph, queries, new_vecs, _ = setup
+    pool = _grow_via_pool(cfg, db, graph, new_vecs[:50])
+    assert pool.cache_size == 50
+    assert pool.metrics.inserts == 50
+    # the first insert is synchronous (empty segment), the rest searched
+    searched = [r for r in pool.metrics.completed if r.kind == "insert"]
+    assert len(searched) == 49
+    assert all(r.rclass.lane == "background" for r in searched)
+    # replica engines saw the broadcast arrays
+    eng = pool.replicas[0].engine
+    assert eng.db.shape[0] == pool.index.db.shape[0]
+    assert eng.db is pool.index.db
+
+
+def test_corpus_search_unaffected_by_growth(setup):
+    """Zero recall regression for RAG probes: corpus searches return
+    bit-identical results on the grown index (segments are disjoint graph
+    components and corpus entry sampling never sees cache rows)."""
+    cfg, db, graph, queries, new_vecs, _ = setup
+    pool = _grow_via_pool(cfg, db, graph, new_vecs[:60])
+    frozen = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False,
+                                      seed=0)
+    grown = ContinuousBatchingEngine(cfg, pool.index.db, pool.index.graph,
+                                     use_pallas=False, seed=0,
+                                     corpus_rows=pool.index.base_n)
+    frozen.admit_batch([(i, queries[i]) for i in range(12)])
+    grown.admit_batch([(i, queries[i]) for i in range(12)])
+    r1 = {rid: ids for rid, ids, _, _ in frozen.run_to_completion()}
+    r2 = {rid: ids for rid, ids, _, _ in grown.run_to_completion()}
+    assert r1.keys() == r2.keys()
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid], r2[rid])
+
+
+def _segment_recall(index, cfg, seg_queries, graph_override=None, seed=0):
+    """recall@10 of cache-segment searches against exact kNN over the
+    inserted vectors."""
+    seg_vecs = index.cache_vectors()
+    true_local, _ = exact_knn(seg_vecs, seg_queries, 10)
+    true_ids = true_local + index.base_n
+    graph = index.graph if graph_override is None else graph_override
+    eng = ContinuousBatchingEngine(cfg, index.db, graph, use_pallas=False,
+                                   seed=seed, corpus_rows=index.base_n)
+    lo, hi = index.entry_range("cache")
+    params = SlotParams(entry_lo=lo, entry_hi=hi)
+    found = {}
+    todo = list(enumerate(seg_queries))
+    while todo or eng.num_active:
+        while todo and eng.num_free:
+            qi, q = todo.pop(0)
+            eng.admit(qi, q, params)
+        for rid, ids, *_ in eng.step_multi()[0]:
+            found[rid] = ids
+    found_ids = np.stack([found[i] for i in range(len(seg_queries))])
+    return recall_at_k(found_ids, true_ids)
+
+
+def test_online_insert_recall_vs_rebuilt_oracle(setup):
+    """Acceptance criterion: recall@10 of searches over the online-grown
+    cache graph ≥ 0.95× the same searches over a graph rebuilt from
+    scratch (offline CAGRA build) on the identical vector set."""
+    cfg, db, graph, queries, new_vecs, seg_queries = setup
+    pool = _grow_via_pool(cfg, db, graph, new_vecs)
+    assert pool.cache_size == len(new_vecs)
+    online = _segment_recall(pool.index, cfg, seg_queries)
+    oracle_graph = pool.index.rebuilt_cache_graph(seed=0)
+    oracle = _segment_recall(pool.index, cfg, seg_queries,
+                             graph_override=oracle_graph)
+    assert oracle > 0.8, oracle  # the oracle itself must be sane
+    assert online >= 0.95 * oracle, (online, oracle)

@@ -1,0 +1,307 @@
+"""Retrieval-class refactor safety net.
+
+1. The recorded-trace bit-identity pin: with the default two-class table,
+   every scheduler decision must match the pre-refactor two-queue
+   scheduler decision-for-decision (tests/data/scheduler_trace.json was
+   recorded at commit e66cc6c, before the lane refactor).
+2. Per-slot engine search params: top-k truncation, extend budgets,
+   entry-segment restriction.
+3. Background-lane semantics: fills spare slots only, never urgent,
+   preemptible by any queued foreground work.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.continuous_batching import (ContinuousBatchingEngine,
+                                            SlotParams)
+from repro.core.scheduler import (DECODE_CLASS, PREFILL_CLASS,
+                                  LaneScheduler, RetrievalClass,
+                                  TwoQueueScheduler, VectorRequest,
+                                  build_registry)
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+
+from scheduler_trace_driver import DATA_PATH, run_trace
+
+CFG = VectorPoolConfig()
+
+
+def _req(rid, kind, t=0.0, ddl=1.0, est=10.0):
+    return VectorRequest(rid, kind, np.zeros(4, np.float32), t, ddl,
+                         est_extends=est)
+
+
+# ---------------------------------------------------------------------------
+# 1. recorded-trace bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["trinity", "prefill_first",
+                                    "decode_first", "fifo_shared"])
+def test_default_table_matches_prerefactor_trace(policy):
+    """Acceptance criterion: with the default two-class table (cache
+    disabled), select/plan_preemption/take_urgent/should_flush decisions
+    are bit-identical to the pre-refactor scheduler on the recorded
+    trace."""
+    with open(DATA_PATH) as f:
+        recorded = json.load(f)[policy]
+    cfg = dataclasses.replace(CFG, preemption_enabled=True,
+                              preempt_slack_ms=2.0, max_preemptions=2)
+
+    def factory(p):
+        return LaneScheduler(cfg, policy=p)
+
+    def make_request(rid, kind, qvec, t, ddl, est):
+        return VectorRequest(rid, kind, qvec, t, ddl, est_extends=est)
+
+    replayed = run_trace(factory, make_request, policy)
+    assert len(replayed) == len(recorded)
+    for i, (got, want) in enumerate(zip(replayed, recorded)):
+        assert got == want, (policy, i, got, want)
+
+
+def test_two_queue_alias_is_lane_scheduler():
+    assert TwoQueueScheduler is LaneScheduler
+
+
+# ---------------------------------------------------------------------------
+# 2. registry + class resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_default_table():
+    reg = build_registry(CFG)
+    assert reg["prefill"].lane == "edf"
+    assert reg["decode"].lane == "fifo"
+    assert reg["cache_lookup"].lane == "edf"
+    assert reg["cache_lookup"].segment == "cache"
+    assert reg["cache_lookup"].score_threshold == CFG.cache_hit_threshold
+    assert reg["insert"].lane == "background"
+    assert reg["insert"].deadline_ms is None
+    assert reg["insert"].top_k == CFG.graph_degree
+
+
+def test_unknown_class_raises():
+    s = LaneScheduler(CFG)
+    with pytest.raises(KeyError, match="unknown retrieval class"):
+        s.submit(_req(0, "nonsense"))
+
+
+def test_request_accepts_class_object():
+    r = VectorRequest(0, PREFILL_CLASS, np.zeros(4, np.float32), 0.0, 1.0)
+    assert r.kind == "prefill" and r.rclass is PREFILL_CLASS
+    assert r.lane == "edf"
+    r2 = VectorRequest(1, DECODE_CLASS, np.zeros(4, np.float32), 0.0, 1.0)
+    assert r2.lane == "fifo"
+
+
+def test_custom_class_registration_routes_lanes():
+    s = LaneScheduler(CFG)
+    s.register(RetrievalClass("bulk_analytics", "fifo", 500.0))
+    s.submit(_req(0, "bulk_analytics", ddl=0.5))
+    s.submit(_req(1, "prefill"))
+    assert len(s.q_fifo) == 1 and len(s.q_edf) == 1
+
+
+def test_queue_public_iterate_and_remove():
+    """Satellite: urgent_queued/take_urgent no longer reach into private
+    queue attributes — lanes expose iterate/remove."""
+    s = LaneScheduler(CFG)
+    reqs = [_req(i, "prefill" if i % 2 else "decode") for i in range(6)]
+    for r in reqs:
+        s.submit(r)
+    edf_items = list(s.q_edf)
+    fifo_items = list(s.q_fifo)
+    assert len(edf_items) == 3 and len(fifo_items) == 3
+    s.q_edf.remove(edf_items[:1])
+    s.q_fifo.remove(fifo_items[:2])
+    assert len(s.q_edf) == 2 and len(s.q_fifo) == 1
+    assert s.queued() == 3
+
+
+# ---------------------------------------------------------------------------
+# 3. background lane semantics
+# ---------------------------------------------------------------------------
+
+
+def _bg(rid, t=0.0):
+    r = VectorRequest(rid, "insert", np.zeros(4, np.float32), t, None)
+    return r
+
+
+def test_background_fills_only_spare_slots():
+    s = LaneScheduler(CFG, policy="trinity")
+    for i in range(3):
+        s.submit(_bg(100 + i))
+    for i in range(4):
+        s.submit(_req(i, "prefill" if i % 2 else "decode"))
+    picked = s.select(6, t_now=0.0)
+    kinds = [r.kind for r in picked]
+    # all 4 foreground first, background fills the 2 leftover slots
+    assert kinds[:4].count("insert") == 0
+    assert kinds[4:] == ["insert", "insert"]
+    assert s.queued_background() == 1
+
+
+def test_background_never_urgent_and_not_counted_in_queued():
+    s = LaneScheduler(CFG)
+    for i in range(5):
+        s.submit(_bg(i))
+    assert s.queued() == 0 and s.queued_background() == 5
+    assert s.urgent_queued(0.0) == []
+    assert s.take_urgent(4, 0.0) == []
+    # but spare capacity still flushes for them
+    assert s.should_flush(0.0, free_slots=4, active=3)
+
+
+def test_background_preempted_by_any_foreground_demand():
+    """An in-flight background insert is evicted for ANY queued foreground
+    request (not just urgent ones), and is exempt from the starvation
+    cap."""
+    s = LaneScheduler(CFG)
+    s.t_ext_ewma = 100e-6
+    bg = _bg(100)
+    bg.rclass = s.classes["insert"]
+    bg.t_admitted = 0.0
+    bg.preemptions = 99  # way past max_preemptions: still evictable
+    s.submit(_req(1, "prefill", ddl=100.0))  # relaxed deadline, NOT urgent
+    victims = s.plan_preemption(0.0, [bg])
+    assert victims == [bg]
+
+
+def test_foreground_victims_still_require_urgency():
+    s = LaneScheduler(CFG)
+    s.t_ext_ewma = 100e-6
+    fg = _req(10, "prefill", ddl=0.050, est=16)
+    fg.rclass = s.classes["prefill"]
+    fg.t_admitted = 0.0
+    s.submit(_req(1, "decode", ddl=100.0))  # queued but relaxed
+    assert s.plan_preemption(0.0, [fg]) == []
+
+
+def test_background_requeue_boosted_front():
+    s = LaneScheduler(CFG)
+    s.submit(_bg(1))
+    s.submit(_bg(2))
+
+    class _Ckpt:
+        extends = 3
+
+    vic = _bg(99)
+    vic.rclass = s.classes["insert"]
+    s.requeue_preempted(vic, _Ckpt(), t_now=1.0)
+    picked = s.select(1, t_now=1.0)
+    assert [r.rid for r in picked] == [99]
+
+
+# ---------------------------------------------------------------------------
+# 4. per-slot engine search params
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    db, queries = make_dataset(2000, 64, num_clusters=16, num_queries=32,
+                               seed=7)
+    graph = make_cagra_graph(db, degree=16, seed=7)
+    cfg = VectorPoolConfig(num_vectors=2000, dim=64, graph_degree=16,
+                           max_requests=8, top_m=32, parents_per_step=2,
+                           task_batch=1024, visited_slots=512, top_k=10)
+    return cfg, db, graph, queries
+
+
+def test_per_slot_topk_truncation(engine_setup):
+    cfg, db, graph, queries = engine_setup
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    eng.admit_batch([(0, queries[0], SlotParams(top_k=3)),
+                     (1, queries[1], None),
+                     (2, queries[2], SlotParams(top_k=7))])
+    out = {rid: ids for rid, ids, _, _ in eng.run_to_completion()}
+    assert out[0].shape == (3,)
+    assert out[1].shape == (cfg.top_k,)
+    assert out[2].shape == (7,)
+    assert not eng.slot_topk  # maps drained with the slots
+
+
+def test_per_slot_extend_budget_forces_completion(engine_setup):
+    cfg, db, graph, queries = engine_setup
+    eng = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    eng.admit(0, queries[0])  # unlimited
+    eng.admit(1, queries[0])  # (entry keys fold in the rid: measure both)
+    free_run = {rid: ext for rid, _, _, ext in eng.run_to_completion()}
+    natural = free_run[1]
+    assert free_run[0] > 4 and natural > 4
+
+    budget = 3
+    eng2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    eng2.admit(0, queries[0], SlotParams(budget=budget))
+    out = eng2.run_to_completion()
+    assert out[0][3] == budget  # stopped exactly at the budget
+    # un-budgeted slot in the same engine is unaffected
+    eng3 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    eng3.admit_batch([(0, queries[0], SlotParams(budget=budget)),
+                      (1, queries[0], None)])
+    res = {rid: ext for rid, _, _, ext in eng3.run_to_completion()}
+    assert res[0] == budget and res[1] == natural
+
+
+def test_budget_zero_matches_unbudgeted_bitwise(engine_setup):
+    cfg, db, graph, queries = engine_setup
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=5)
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=5)
+    e1.admit_batch([(i, queries[i]) for i in range(4)])
+    e2.admit_batch([(i, queries[i], SlotParams(budget=0)) for i in range(4)])
+    r1 = {rid: (ids, ext) for rid, ids, _, ext in e1.run_to_completion()}
+    r2 = {rid: (ids, ext) for rid, ids, _, ext in e2.run_to_completion()}
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid][0], r2[rid][0])
+        assert r1[rid][1] == r2[rid][1]
+
+
+def test_budget_survives_preemption(engine_setup):
+    """Checkpoints carry the per-slot budget and top-k: an evicted budgeted
+    search restored elsewhere still stops at its budget."""
+    cfg, db, graph, queries = engine_setup
+    budget = 4
+    e1 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=3)
+    e1.admit(7, queries[3], SlotParams(budget=budget, top_k=5))
+    e1.step_multi(2)
+    ckpts = e1.preempt([7])
+    assert ckpts[0][1].budget == budget and ckpts[0][1].top_k == 5
+    e2 = ContinuousBatchingEngine(cfg, db, graph, use_pallas=False, seed=99)
+    e2.resume_batch(ckpts)
+    out = e2.run_to_completion()
+    assert out[0][3] == budget
+    assert out[0][1].shape == (5,)
+
+
+def test_entry_segment_restricts_search(engine_setup):
+    """Entry points sampled from a segment with no edges into the other
+    segment keep the whole search inside that segment."""
+    cfg, db, graph, queries = engine_setup
+    n = db.shape[0]
+    extra = 64
+    # capacity-style layout: corpus [0, n) + second segment [n, n+extra)
+    rng = np.random.default_rng(0)
+    seg_vecs = queries[:extra // 2]
+    seg_vecs = np.concatenate([seg_vecs, seg_vecs + 0.01]).astype(np.float32)
+    db_cap = np.concatenate([db, seg_vecs])
+    seg_graph = np.full((extra, graph.shape[1]), -1, np.int32)
+    for i in range(extra):  # ring within the segment (global ids)
+        seg_graph[i, 0] = n + (i + 1) % extra
+        seg_graph[i, 1] = n + (i - 1) % extra
+    graph_cap = np.concatenate([graph, seg_graph])
+    eng = ContinuousBatchingEngine(cfg, db_cap, graph_cap, use_pallas=False,
+                                   seed=3, corpus_rows=n)
+    eng.admit_batch([
+        (0, queries[0], None),  # default: corpus segment
+        (1, queries[0], SlotParams(entry_lo=n, entry_hi=n + extra)),
+    ])
+    out = {rid: ids for rid, ids, _, _ in eng.run_to_completion()}
+    assert np.all((out[0] >= 0) & (out[0] < n))
+    assert np.all(out[1] >= n)
