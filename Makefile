@@ -6,7 +6,7 @@
 PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
-	bench-cache
+	bench-cache bench-sharded trace-check
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -28,3 +28,9 @@ bench-preemption:
 
 bench-cache:
 	PYTHONPATH=src python -m benchmarks.bench_semantic_cache
+
+bench-sharded:
+	PYTHONPATH=src python -m benchmarks.bench_sharded
+
+trace-check:
+	PYTHONPATH=src:tests python -m scheduler_trace_driver --check

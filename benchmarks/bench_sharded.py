@@ -1,0 +1,233 @@
+"""Sharded scatter–gather serving benchmark: capacity scaling past one
+replica's memory, fan-out merge overhead, and the routed-mode
+recall/latency frontier.
+
+Sections (all recorded in ``BENCH_sharded.json``):
+
+  A — capacity: a corpus deliberately sized PAST ``replica_max_rows`` (the
+      modeled per-replica HBM row budget). The monolithic pool refuses to
+      build (CapacityError); S = {2, 4} sharded pools serve it with every
+      shard under budget. This is the "grow the pool past one device's
+      memory" claim in numbers.
+
+  B — exactness: fan-out-all under exhaustive per-shard search merged via
+      the jitted partial-top-k must equal the monolithic exact oracle
+      id-for-id (``exact_mismatches`` is asserted 0 and recorded).
+
+  C — fan-out overhead + routed frontier: the same Poisson prefill-probe
+      stream through a monolithic 1-replica pool (S=1 baseline) and
+      sharded pools at ``nprobe_shards`` ∈ {1, …, S}. Per-request latency
+      (a fan-out completes at its SLOWEST child) vs recall@10 against the
+      exact oracle — the recall/latency frontier the router trades on.
+      Acceptance: routed mode at nprobe = S/2 holds ≥ 0.95× the
+      monolithic graph recall.
+
+  D — sharded cluster scenario: the full sim serving the over-capacity
+      corpus with the semantic cache on; per-shard inserts mean every
+      broadcast touches ONLY the owning shard's replicas
+      (``global_broadcasts`` is computed as broadcasts beyond the owning
+      shard's replica count and asserted 0).
+
+``PYTHONPATH=src python -m benchmarks.bench_sharded``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, poisson_arrivals
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import (CapacityError, ShardedVectorPool,
+                                     VectorPool)
+from repro.serving.cluster import make_sharded_pool_sim
+from repro.serving.request import GenRequest
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+from repro.vector.ref import exact_knn, recall_at_k
+from repro.vector.shards import ShardedIndex
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_sharded.json")
+
+N_VECTORS = 6000
+DIM = 64
+SHARDS = 4
+REPLICA_MAX_ROWS = 2600  # < N_VECTORS: monolithic cannot fit
+N_PROBES = 192
+PROBE_RATE_QPS = 400.0
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=N_VECTORS, dim=DIM, graph_degree=16,
+                max_requests=16, top_m=32, parents_per_step=2,
+                task_batch=2048, visited_slots=512, top_k=10)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+def _probe_stream(pool, queries, seed: int = 3):
+    """One Poisson prefill-probe stream; returns (latencies, found_ids,
+    qvecs) aligned by rid."""
+    cfg = pool.cfg
+    nq = len(queries)
+    arrivals = poisson_arrivals(PROBE_RATE_QPS, N_PROBES, seed=seed)
+    for i, t in enumerate(arrivals):
+        pool.submit(VectorRequest(i, "prefill", queries[i % nq], float(t),
+                                  float(t) + cfg.prefill_deadline_ms / 1e3))
+    pool.run_until(float(arrivals[-1]) + 2.0)
+    done = {r.rid: r for r in pool.metrics.completed}
+    assert len(done) == N_PROBES
+    lats = np.asarray([done[i].t_completed - done[i].t_arrival
+                       for i in range(N_PROBES)])
+    found = np.stack([done[i].result_ids for i in range(N_PROBES)])
+    qvecs = np.stack([queries[i % nq] for i in range(N_PROBES)])
+    return lats, found, qvecs
+
+
+def _arm_stats(name, lats, found, true_ids, extra=None):
+    out = {
+        "arm": name,
+        "latency_p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "latency_p95_ms": float(np.percentile(lats, 95) * 1e3),
+        "recall_at_10": recall_at_k(found, true_ids),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+def run(emit_rows: bool = True, out_path: str = DEFAULT_OUT):
+    db, queries = make_dataset(N_VECTORS, DIM, num_clusters=32,
+                               num_queries=256, seed=11)
+    true_all, _ = exact_knn(db, queries, 10)
+    # probe i carries queries[i % nq]; with N_PROBES <= nq that is row i
+    assert N_PROBES <= len(queries)
+    true_ids = true_all[:N_PROBES]
+
+    # -- A: capacity scaling past one replica's memory ----------------------
+    capacity = {"corpus_rows": N_VECTORS,
+                "replica_max_rows": REPLICA_MAX_ROWS}
+    try:
+        VectorPool(_cfg(replica_max_rows=REPLICA_MAX_ROWS), db,
+                   make_cagra_graph(db, 16, seed=11))
+        capacity["monolithic_fits"] = True
+    except CapacityError as e:
+        capacity["monolithic_fits"] = False
+        capacity["monolithic_error"] = str(e)
+    for S in (2, 4):
+        si = ShardedIndex(db, num_shards=S, degree=16, seed=11)
+        rows = [sh.db.shape[0] for sh in si.shards]
+        capacity[f"sharded_S{S}"] = {
+            "max_rows_per_replica": int(max(rows)),
+            "fits": bool(max(rows) <= REPLICA_MAX_ROWS),
+        }
+    assert not capacity["monolithic_fits"]
+    assert capacity[f"sharded_S{SHARDS}"]["fits"]
+
+    # -- B: fan-out-all exactness under exhaustive per-shard search ---------
+    si = ShardedIndex(db, num_shards=SHARDS, degree=16, seed=11)
+    ex_ids, _ = si.exact_search(queries, 10)
+    exact_mismatches = int(np.sum(np.any(ex_ids != true_all, axis=1)))
+    assert exact_mismatches == 0, exact_mismatches
+
+    # -- C: fan-out overhead + routed recall/latency frontier ---------------
+    arms = []
+    mono = VectorPool(_cfg(), db, make_cagra_graph(db, 16, seed=11),
+                      replicas=1, use_pallas=False, seed=0)
+    lats, found, _ = _probe_stream(mono, queries)
+    arms.append(_arm_stats("monolithic_S1", lats, found, true_ids,
+                           {"sub_searches_per_request": 1.0}))
+    mono_recall = arms[0]["recall_at_10"]
+    for nprobe in range(1, SHARDS + 1):
+        pool = ShardedVectorPool(
+            _cfg(num_shards=SHARDS, nprobe_shards=nprobe), db,
+            replicas_per_shard=1, use_pallas=False, seed=0, shard_index=si)
+        lats, found, _ = _probe_stream(pool, queries)
+        arms.append(_arm_stats(
+            f"sharded_S{SHARDS}_nprobe{nprobe}", lats, found, true_ids,
+            {"sub_searches_per_request":
+             pool.metrics.sub_searches / N_PROBES,
+             "merges": pool.metrics.merges}))
+    fanout_all = arms[-1]
+    routed_half = arms[SHARDS // 2]  # nprobe = S/2
+    recall_ratio_half = routed_half["recall_at_10"] / max(mono_recall, 1e-9)
+    assert recall_ratio_half >= 0.95, recall_ratio_half
+
+    # -- D: cluster sim over the over-capacity corpus -----------------------
+    sim, _, _ = make_sharded_pool_sim(
+        num_vectors=N_VECTORS, dim=DIM, num_shards=SHARDS,
+        replica_max_rows=REPLICA_MAX_ROWS, seed=11)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(48):
+        t += float(rng.exponential(0.03))
+        sim.arrive(GenRequest(i, prompt_len=256, max_new_tokens=8,
+                              t_arrival=t, rag_interval=4,
+                              prompt_id=int(rng.integers(0, 6))))
+    sim.run(t + 10.0)
+    s = sim.metrics.summary(t + 10.0)
+    pm = sim.vector_pool.metrics
+    own_counts = [len(sim.vector_pool.shard_replicas(sh))
+                  for sh in range(SHARDS)]
+    # broadcasts beyond the owning shard's replicas would be "global"
+    global_broadcasts = max(0, pm.broadcasts - pm.inserts * max(own_counts))
+    cluster = {
+        "requests": s["requests"],
+        "cache_hits": s["cache_hits"],
+        "pool_inserts": pm.inserts,
+        "cache_size": sim.vector_pool.cache_size,
+        "broadcasts": pm.broadcasts,
+        "replicas": len(sim.vector_pool.replicas),
+        "global_broadcasts": global_broadcasts,
+        "sub_searches": pm.sub_searches,
+        "merges": pm.merges,
+        "ttft_p50_ms": s["ttft_p50"] * 1e3,
+        "ttft_p95_ms": s["ttft_p95"] * 1e3,
+    }
+    assert cluster["global_broadcasts"] == 0
+    assert cluster["requests"] == 48
+
+    report = {
+        "scenario": {"num_vectors": N_VECTORS, "dim": DIM,
+                     "num_shards": SHARDS,
+                     "replica_max_rows": REPLICA_MAX_ROWS,
+                     "probes": N_PROBES, "probe_rate_qps": PROBE_RATE_QPS},
+        "capacity": capacity,
+        "exact_mismatches_fanout_all": exact_mismatches,
+        "frontier": arms,
+        "fanout_merge_overhead_p50":
+            fanout_all["latency_p50_ms"] / max(arms[0]["latency_p50_ms"],
+                                               1e-9),
+        "routed_half_recall_ratio_vs_monolithic": recall_ratio_half,
+        "sharded_cluster": cluster,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    rows = []
+    for a in arms:
+        for metric in ("latency_p50_ms", "latency_p95_ms", "recall_at_10",
+                       "sub_searches_per_request"):
+            rows.append((a["arm"], metric, round(float(a[metric]), 4)))
+    rows.append(("cluster", "global_broadcasts",
+                 cluster["global_broadcasts"]))
+    rows.append(("cluster", "cache_hits", cluster["cache_hits"]))
+    if emit_rows:
+        emit(rows, ("arm", "metric", "value"))
+    return {"exact_mismatches": exact_mismatches,
+            "monolithic_fits": capacity["monolithic_fits"],
+            "fanout_p50_overhead":
+                round(report["fanout_merge_overhead_p50"], 3),
+            "routed_half_recall_ratio": round(recall_ratio_half, 4),
+            "global_broadcasts": cluster["global_broadcasts"],
+            "json": out_path}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    print(run(out_path=args.out))

@@ -13,7 +13,8 @@ import time
 from benchmarks import (bench_architectures, bench_continuous_batching,
                         bench_engine_dispatch, bench_preemption,
                         bench_recall_latency, bench_roofline_stages,
-                        bench_scheduler, bench_semantic_cache)
+                        bench_scheduler, bench_semantic_cache,
+                        bench_sharded)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -24,6 +25,7 @@ BENCHES = {
     "supp_engine_dispatch": bench_engine_dispatch.run,
     "supp_preemption": bench_preemption.run,
     "supp_semantic_cache": bench_semantic_cache.run,
+    "supp_sharded": bench_sharded.run,
 }
 
 

@@ -189,6 +189,36 @@ class VectorPoolConfig:
     cache_top_k: int = 4  # results returned per cache lookup
     cache_lookup_budget: int = 32  # extend budget per lookup (0 = unlimited)
     insert_budget: int = 16  # extend budget per insert neighbor search
+    # bounded cache segment (eviction): entries older than cache_ttl_s are
+    # lazily evicted at the next insert; cache_max_entries caps the live
+    # entry count (oldest evicted first) and evicted slots are REUSED, so
+    # capacity stops doubling unbounded. 0 = off (legacy unbounded growth)
+    cache_ttl_s: float = 0.0
+    cache_max_entries: int = 0
+    # answer-transfer cost: a semantic-cache hit ships its cached answer
+    # (answer_tokens × this many bytes) over the shared KV link instead of
+    # serving in zero simulated time — small payloads still queue behind
+    # in-flight multi-MB prefill KV transfers. 0 = legacy free hits
+    answer_bytes_per_token: float = 4.0
+    # sharded serving (scatter–gather): partition the corpus into
+    # num_shards balanced-k-means shards, each a self-contained
+    # OnlineIndex owned by replicas_per_shard replicas; searches fan out
+    # to nprobe_shards nearest shard centroids (0 = all shards, exact
+    # under exhaustive per-shard search) and merge via a jitted partial
+    # top-k. Inserts route to the owning shard only (no global broadcast)
+    num_shards: int = 1
+    nprobe_shards: int = 0  # 0 = fan out to every shard
+    replicas_per_shard: int = 1
+    shard_kmeans_iters: int = 8
+    # fine routing sub-centroids per shard: the balanced partition splits
+    # popular cells across shards, so routing scores each shard by the MIN
+    # distance over several sub-centroids instead of one mean
+    shard_route_centroids: int = 4
+    cache_replication: int = 2  # min replicas on shards holding cache rows
+    # per-replica index row capacity (HBM model): a replica whose index
+    # (frozen + cache segments) exceeds this refuses to build — the signal
+    # that a corpus must be sharded. 0 = unlimited
+    replica_max_rows: int = 0
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

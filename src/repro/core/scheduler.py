@@ -135,6 +135,14 @@ class VectorRequest:
     # plain class-name string was passed)
     rclass: Optional[RetrievalClass] = dataclasses.field(
         default=None, repr=False)
+    # scatter–gather fan-out: a sharded pool splits one logical request
+    # into per-shard sub-searches (children). A child carries its parent's
+    # rid and its target shard; it inherits the parent's deadline (single
+    # deadline — every lane/urgency decision sees the logical request's
+    # slack) and its checkpoint stays shard-portable (any replica of the
+    # same shard can resume it). Parent completion = all children merged.
+    parent_rid: Optional[int] = dataclasses.field(default=None, repr=False)
+    shard: Optional[int] = dataclasses.field(default=None, repr=False)
     # stage-aware preemption bookkeeping
     preemptions: int = 0  # times evicted so far (capped by max_preemptions)
     checkpoint: Optional[object] = None  # engine SlotCheckpoint while queued

@@ -11,10 +11,29 @@ Online index growth: the pool owns the authoritative
 ``vector.online.OnlineIndex``. An insert is submitted as a deadline-less
 background-class request whose engine search (restricted to the cache
 segment) performs the neighbor selection; on completion the pool patches
-the index (``insert_batch``) and broadcasts the grown arrays to every
-replica engine (``engine.set_index`` — a buffer-pointer swap). Background
+the index (``insert_batch``) and broadcasts the grown arrays to the owning
+replica engines (``engine.set_index`` — a buffer-pointer swap). Background
 inserts only fill slots the foreground lanes left free, and the scheduler
 evicts them for ANY queued foreground work.
+
+Sharded scatter–gather serving (:class:`ShardedVectorPool`): one replica's
+HBM bounds a monolithic index, and every insert broadcast touches every
+replica. With ``cfg.num_shards > 1`` the corpus is partitioned into
+balanced-k-means shards (``vector/shards.ShardedIndex``), each a
+self-contained OnlineIndex owned by ``replicas_per_shard`` replicas with
+their own scheduler lane set. A submitted request becomes S (or
+``nprobe_shards``-routed) per-shard *children* riding the normal
+continuous-batching slots — per-slot entry bounds keep every shard on ONE
+compiled engine program — and the parent completes when all children have
+merged through the jitted partial-top-k (``kernels/ops.py``). Children
+inherit the parent's single deadline, their preemption checkpoints are
+portable to any replica of the same shard, inserts route to the owning
+shard only (zero global broadcasts — ``PoolMetrics.broadcasts`` counts
+exactly the owning shard's replicas), and ``kill_replica`` re-assigns a
+shard left with no replica (``cache_replication`` keeps cache-holding
+shards at ≥ 2 replicas so a kill never strands the answer cache).
+``replica_max_rows`` models per-replica HBM: a monolithic pool over a
+corpus past it raises :class:`CapacityError`; the sharded pool serves it.
 
 Pool-level features beyond the paper's minimum, needed at 1000-node scale:
   · data-parallel engine replicas with least-loaded dispatch,
@@ -47,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
@@ -56,7 +75,10 @@ from repro.core.continuous_batching import (ContinuousBatchingEngine,
                                             SlotParams)
 from repro.core.scheduler import (ControllerFeedback, TwoQueueScheduler,
                                   VectorRequest)
-from repro.vector.online import OnlineIndex
+# CapacityError is raised at construction (frozen rows over budget) and at
+# cache growth (insert load pushing a replica past its modeled HBM)
+from repro.vector.online import CapacityError, OnlineIndex
+from repro.vector.shards import ShardedIndex
 
 
 @dataclasses.dataclass
@@ -71,6 +93,12 @@ class PoolMetrics:
     preempt_time: float = 0.0  # total evicted time across completed reqs
     # online index growth
     inserts: int = 0  # cache-segment nodes added
+    cache_evictions: int = 0  # cache entries retired (TTL / capacity cap)
+    broadcasts: int = 0  # engine.set_index calls (per-replica, per-insert)
+    # sharded scatter–gather
+    sub_searches: int = 0  # per-shard children dispatched
+    merges: int = 0  # parent fan-outs merged to completion
+    shard_reassignments: int = 0  # orphaned shards re-homed after a kill
 
     def latencies(self, kind: Optional[str] = None) -> np.ndarray:
         xs = [r.t_completed - r.t_arrival for r in self.completed
@@ -92,12 +120,30 @@ class _Replica:
         self.engine = ContinuousBatchingEngine(cfg, index.db, index.graph,
                                                use_pallas=use_pallas,
                                                seed=seed,
-                                               corpus_rows=index.base_n)
+                                               corpus_rows=index.corpus_n)
+        self.shard = -1  # owning shard (sharded pools; −1 = monolithic)
         self.clock = 0.0
         self.ext_latency_ewma = roofline_model.extend_time(cfg)
         self.slowdown = 1.0  # >1 = straggling hardware
         self.quarantined = False
         self.in_flight: Dict[int, VectorRequest] = {}
+
+
+class _Fanout:
+    """Host-side state of one logical request split into per-shard
+    children: pending shard set + per-shard partial results."""
+
+    __slots__ = ("parent", "pending", "ids", "dists", "extends", "t_done",
+                 "t_admitted")
+
+    def __init__(self, parent: VectorRequest, targets: Set[int]):
+        self.parent = parent
+        self.pending = set(targets)
+        self.ids: List[np.ndarray] = []
+        self.dists: List[np.ndarray] = []
+        self.extends = 0
+        self.t_done = -np.inf
+        self.t_admitted: Optional[float] = None
 
 
 class VectorPool:
@@ -109,16 +155,6 @@ class VectorPool:
         self.cfg = cfg
         self.db = db  # frozen corpus (np view; device arrays live in index)
         self.graph = graph
-        self.index = OnlineIndex(
-            db, graph, metric=cfg.metric,
-            cache_capacity=(cfg.cache_capacity
-                            if cfg.semantic_cache_enabled else 0))
-        self.scheduler = TwoQueueScheduler(cfg, policy=policy,
-                                           classes=classes)
-        self.replicas: List[_Replica] = [
-            _Replica(i, cfg, self.index, use_pallas, seed + i)
-            for i in range(replicas)]
-        self._next_rid = replicas
         self.metrics = PoolMetrics()
         # online inserts: pool-internal rid space + answer-cache metadata
         self._insert_rid = 1 << 28
@@ -133,7 +169,50 @@ class VectorPool:
         self._seed = seed
         self._pending: list = []  # (t_arrival, seq, request) heap
         self._pending_seq = 0  # deterministic tiebreak (id() varies by run)
-        self.peak_replicas = replicas
+        self._build(db, graph, replicas, policy, classes)
+        self.peak_replicas = len(self.replicas)
+
+    # -------------------------------------------------- construction hooks
+    def _build(self, db, graph, replicas: int, policy: str, classes):
+        """Index + scheduler + replica construction (the sharded pool
+        overrides this with per-shard indexes/schedulers/replicas)."""
+        cfg = self.cfg
+        self.index = OnlineIndex(
+            db, graph, metric=cfg.metric,
+            cache_capacity=(cfg.cache_capacity
+                            if cfg.semantic_cache_enabled else 0),
+            ttl=cfg.cache_ttl_s, max_entries=cfg.cache_max_entries,
+            max_rows=cfg.replica_max_rows)
+        self._check_capacity(self.index)
+        self.scheduler = TwoQueueScheduler(cfg, policy=policy,
+                                           classes=classes)
+        self.schedulers = [self.scheduler]
+        self.replicas: List[_Replica] = [
+            _Replica(i, cfg, self.index, self._use_pallas, self._seed + i)
+            for i in range(replicas)]
+        self._next_rid = replicas
+
+    def _check_capacity(self, index: OnlineIndex):
+        cap = self.cfg.replica_max_rows
+        rows = index.db.shape[0]
+        if cap and rows > cap:
+            raise CapacityError(
+                f"replica index needs {rows} rows but replica_max_rows="
+                f"{cap}; shard the corpus (VectorPoolConfig.num_shards > 1)")
+
+    # ------------------------------------------------------ routing hooks
+    def _sched_for(self, rep: _Replica):
+        """The scheduler feeding this replica (per-shard when sharded)."""
+        return self.scheduler
+
+    def _index_for(self, rep: _Replica) -> OnlineIndex:
+        """The index this replica's engine serves."""
+        return self.index
+
+    def _dispatch(self, req: VectorRequest):
+        """Hand a released request to scheduling (the sharded pool splits
+        it into per-shard children here)."""
+        self.scheduler.submit(req)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: VectorRequest):
@@ -157,25 +236,56 @@ class VectorPool:
         """
         vec = np.asarray(vec, np.float32)
         if self.index.cache_size == 0:
-            return self._apply_insert(vec, None, meta)
+            return self._apply_insert(vec, None, meta, t_now=t_now)
         rid = self._insert_rid
         self._insert_rid += 1
         self._insert_meta[rid] = meta
         self.submit(VectorRequest(rid, "insert", vec, t_now, None))
         return None
 
-    def _apply_insert(self, vec, neighbor_ids, meta):
+    def _apply_insert(self, vec, neighbor_ids, meta, t_now: float = 0.0):
         """Patch the index and broadcast the grown arrays to every replica
-        (must happen immediately: engines alias the index buffers)."""
-        row = self.index.insert(vec, neighbor_ids)
+        (must happen immediately: engines alias the index buffers).
+        TTL/capacity evictions retired by this insert drop their answer
+        metadata so an expired entry can never serve a hit."""
+        row = self.index.insert(vec, neighbor_ids, t_now=t_now)
+        for gone in self.index.drain_evicted():
+            self.cache_meta.pop(gone, None)
+            self.metrics.cache_evictions += 1
         if meta is not None:
             self.cache_meta[row] = meta
         self.metrics.inserts += 1
         for rep in self.replicas:
             rep.engine.set_index(self.index.db, self.index.graph)
+        self.metrics.broadcasts += len(self.replicas)
         return row
 
-    def _params_for(self, req: VectorRequest) -> Optional[SlotParams]:
+    def _born_at(self, row: int) -> Optional[float]:
+        """Insert time of the row's current occupant (hook: the sharded
+        pool resolves through its gid map)."""
+        return self.index.born_at(row)
+
+    def meta_at(self, row: int, t_lookup: float):
+        """Answer metadata for a result row, guarded two ways: (a) slot
+        reuse — a cache row evicted and re-filled AFTER a lookup completed
+        must not serve the new occupant's answer for the old query, so the
+        occupant must already have been inserted when the lookup finished;
+        (b) TTL at serve time — index eviction is lazy (insert-driven), so
+        a fully-warmed all-hit workload never evicts, and expiry must be
+        judged here or a stale answer serves forever."""
+        meta = self.cache_meta.get(row)
+        if meta is None:
+            return None
+        born = self._born_at(row)
+        if born is None or born > t_lookup + 1e-12:
+            return None
+        ttl = self.cfg.cache_ttl_s
+        if ttl > 0 and t_lookup > born + ttl + 1e-12:
+            return None
+        return meta
+
+    def _params_for(self, req: VectorRequest,
+                    rep: Optional[_Replica] = None) -> Optional[SlotParams]:
         """Per-slot engine search params derived from the request's
         retrieval class; None (engine defaults) for plain corpus classes —
         keeps the default two-class table on the exact pre-refactor path."""
@@ -183,14 +293,14 @@ class VectorPool:
         if rc is None or (rc.segment == "corpus" and rc.extend_budget == 0
                           and rc.top_k is None):
             return None
-        lo, hi = self.index.entry_range(rc.segment)
+        lo, hi = self._index_for(rep).entry_range(rc.segment)
         return SlotParams(top_k=rc.top_k, budget=rc.extend_budget,
                           entry_lo=lo, entry_hi=hi)
 
     def _release_pending(self, t_now: float):
         while self._pending and self._pending[0][0] <= t_now:
             _, _, req = heapq.heappop(self._pending)
-            self.scheduler.submit(req)
+            self._dispatch(req)
 
     def run_until(self, t_end: float):
         """Advance every replica's clock to t_end, stepping engines whenever
@@ -207,12 +317,13 @@ class VectorPool:
         """Fail-stop: in-flight requests re-queue (at their original
         arrival time — latency accounting keeps the failure cost)."""
         rep = self.replicas.pop(idx)
+        sched = self._sched_for(rep)
         for req in rep.in_flight.values():
             req.t_admitted = None
             # device state is gone: restart from scratch on re-admission
             req.checkpoint = None
             req.extends_done = 0
-            self.scheduler.submit(req)
+            sched.submit(req)
 
     def add_replica(self):
         self.replicas.append(_Replica(self._next_rid, self.cfg, self.index,
@@ -237,7 +348,7 @@ class VectorPool:
         fresh = [r for r in batch if r.checkpoint is None]
         resumed = [r for r in batch if r.checkpoint is not None]
         if fresh:
-            rep.engine.admit_batch([(r.rid, r.qvec, self._params_for(r))
+            rep.engine.admit_batch([(r.rid, r.qvec, self._params_for(r, rep))
                                     for r in fresh])
         if resumed:
             rep.engine.resume_batch([(r.rid, r.checkpoint) for r in resumed])
@@ -255,21 +366,32 @@ class VectorPool:
         of the work it was evicted for)."""
         if not self.cfg.preemption_enabled or rep.engine.num_free > 0:
             return
-        victims = self.scheduler.plan_preemption(
-            t, list(rep.in_flight.values()))
+        sched = self._sched_for(rep)
+        victims = sched.plan_preemption(t, list(rep.in_flight.values()))
         if not victims:
             return
         for rid, ckpt in rep.engine.preempt([v.rid for v in victims]):
             req = rep.in_flight.pop(rid)
-            self.scheduler.requeue_preempted(req, ckpt, t)
+            sched.requeue_preempted(req, ckpt, t)
         self.metrics.preemptions += len(victims)
-        urgent = self.scheduler.take_urgent(rep.engine.num_free, t)
+        urgent = sched.take_urgent(rep.engine.num_free, t)
         if urgent:
             self._admit(rep, urgent)
 
+    def _on_complete(self, req: VectorRequest, rep: _Replica):
+        """Completion hook (request already stamped with results/times)."""
+        if req.kind == "insert":
+            # the finished background search IS the neighbor selection
+            self._apply_insert(req.qvec, req.result_ids,
+                               self._insert_meta.pop(req.rid, None),
+                               t_now=req.t_completed)
+        self.metrics.preempt_time += req.resume_wait
+        self.metrics.completed.append(req)
+
     def _step_replica(self, rep: _Replica, t_end: float):
         t = rep.clock
-        self.scheduler.controller.maybe_update(t, self.feedback)
+        sched = self._sched_for(rep)
+        sched.controller.maybe_update(t, self.feedback)
         self._maybe_scale(t)
 
         healthy = self._healthy(rep)
@@ -277,15 +399,15 @@ class VectorPool:
             self._maybe_preempt(rep, t)
         free = rep.engine.num_free
         if healthy and \
-                self.scheduler.should_flush(t, free, rep.engine.num_active):
-            batch = self.scheduler.select(free, t)
+                sched.should_flush(t, free, rep.engine.num_active):
+            batch = sched.select(free, t)
             if batch:
                 self._admit(rep, batch)
 
         if rep.engine.num_active == 0:
             # idle: jump to the next arrival (or a small quantum / t_end)
-            if self.scheduler.queued() > 0:
-                rep.clock = t + self.scheduler.controller.tau_pre
+            if sched.queued() > 0:
+                rep.clock = t + sched.controller.tau_pre
             elif self._pending:
                 rep.clock = max(t + 1e-9, min(self._pending[0][0], t_end))
             else:
@@ -298,7 +420,7 @@ class VectorPool:
         dt = roofline_model.extend_time(self.cfg) * rep.slowdown
         rep.clock = t + k * dt
         rep.ext_latency_ewma = 0.9 * rep.ext_latency_ewma + 0.1 * dt
-        self.scheduler.observe_extend_latency(dt)
+        sched.observe_extend_latency(dt)
         self.metrics.extend_steps += k
         self.metrics.tasks_emitted += int(tasks_k.sum())
         self.metrics.tasks_capacity += k * self.cfg.task_batch
@@ -310,12 +432,7 @@ class VectorPool:
             req.extends_used = extends
             req.result_ids = ids
             req.result_dists = dists
-            if req.kind == "insert":
-                # the finished background search IS the neighbor selection
-                self._apply_insert(req.qvec, ids,
-                                   self._insert_meta.pop(rid, None))
-            self.metrics.preempt_time += req.resume_wait
-            self.metrics.completed.append(req)
+            self._on_complete(req, rep)
 
     def _maybe_scale(self, t_now: float):
         if not self.elastic:
@@ -330,3 +447,264 @@ class VectorPool:
                     if r.engine.num_active == 0]
             if idle:
                 self.replicas.pop(idle[-1])
+
+
+class ShardedVectorPool(VectorPool):
+    """Scatter–gather router over S balanced-k-means shards.
+
+    Each shard is a self-contained ``OnlineIndex`` (padded to a common
+    frozen-segment shape, so all shard engines share one compiled program)
+    served by its own replicas and scheduler lane set. ``submit`` fans a
+    logical request out into per-shard children (all shards, or the
+    ``nprobe_shards`` nearest centroids); the parent completes when every
+    child has merged through the jitted partial-top-k. Inserts route to
+    the owning (nearest-centroid) shard only and broadcast grown arrays to
+    that shard's replicas alone — no global broadcast, ever.
+    """
+
+    MAX_SHARDS = 64  # child rid encoding: (parent_rid << 6) | shard
+
+    def __init__(self, cfg, db, *, replicas_per_shard: Optional[int] = None,
+                 policy: str = "trinity", use_pallas: Optional[bool] = None,
+                 straggler_factor: float = 2.5, classes=None, seed: int = 0,
+                 shard_index: Optional[ShardedIndex] = None):
+        rps = replicas_per_shard or cfg.replicas_per_shard
+        # benchmarks sweep router knobs over one prebuilt partition — only
+        # safe to share across pools for search-only workloads (inserts
+        # mutate the shards)
+        self._prebuilt_index = shard_index
+        super().__init__(cfg, db, None, replicas=rps, policy=policy,
+                         use_pallas=use_pallas,
+                         straggler_factor=straggler_factor, elastic=False,
+                         classes=classes, seed=seed)
+
+    # -------------------------------------------------------- construction
+    def _build(self, db, graph, replicas_per_shard: int, policy: str,
+               classes):
+        cfg = self.cfg
+        S = cfg.num_shards
+        assert 1 <= S <= self.MAX_SHARDS, S
+        if self._prebuilt_index is not None:
+            assert self._prebuilt_index.num_shards == S
+            self.shards = self._prebuilt_index
+        else:
+            self.shards = ShardedIndex(
+                db, num_shards=S, degree=cfg.graph_degree,
+                metric=cfg.metric,
+                cache_capacity=(cfg.cache_capacity
+                                if cfg.semantic_cache_enabled else 0),
+                kmeans_iters=cfg.shard_kmeans_iters, seed=self._seed,
+                ttl=cfg.cache_ttl_s, max_entries=cfg.cache_max_entries,
+                max_rows=cfg.replica_max_rows,
+                route_centroids=cfg.shard_route_centroids)
+        for sh in self.shards.shards:
+            self._check_capacity(sh)
+        self.index = None  # no monolithic index exists
+        self.schedulers = [TwoQueueScheduler(cfg, policy=policy,
+                                             classes=classes)
+                           for _ in range(S)]
+        self.scheduler = self.schedulers[0]  # primary (class registry)
+        for sch in self.schedulers[1:]:
+            # ONE shared registry: scheduler.register() on any shard (the
+            # public API registers on the primary) is visible to every
+            # shard's resolve(), or children of a custom class would
+            # KeyError on shards 1..S-1
+            sch.classes = self.scheduler.classes
+        self.replicas: List[_Replica] = []
+        self._next_rid = 0
+        for s in range(S):
+            for _ in range(replicas_per_shard):
+                self._add_shard_replica(s)
+        self._fanout: Dict[int, _Fanout] = {}  # parent rid → fan-out state
+        self._insert_shard: Dict[int, int] = {}  # insert rid → owning shard
+
+    def _add_shard_replica(self, s: int) -> _Replica:
+        rep = _Replica(self._next_rid, self.cfg, self.shards.shards[s],
+                       self._use_pallas, self._seed + self._next_rid)
+        rep.shard = s
+        rep.clock = max((r.clock for r in self.replicas), default=0.0)
+        self._next_rid += 1
+        self.replicas.append(rep)
+        self.peak_replicas = max(getattr(self, "peak_replicas", 0),
+                                 len(self.replicas))
+        return rep
+
+    def shard_replicas(self, s: int) -> List[_Replica]:
+        return [r for r in self.replicas if r.shard == s]
+
+    # ------------------------------------------------------ routing hooks
+    def _sched_for(self, rep: _Replica):
+        return self.schedulers[rep.shard]
+
+    def _index_for(self, rep: _Replica) -> OnlineIndex:
+        return self.shards.shards[rep.shard]
+
+    @staticmethod
+    def _child_rid(parent_rid: int, s: int) -> int:
+        return (parent_rid << 6) | s
+
+    def _dispatch(self, parent: VectorRequest):
+        """Split a released logical request into per-shard children.
+
+        Target shards: the owning shard for inserts, every cache-holding
+        shard for cache-segment classes (the answer cache is small — exact
+        fan-out keeps hit semantics identical to monolithic), and the
+        ``nprobe_shards`` nearest centroids (0 = all) for corpus classes.
+        """
+        rc = self.scheduler.resolve(parent)
+        if parent.kind == "insert":
+            targets = [self._insert_shard.pop(parent.rid)]
+        elif rc.segment == "cache":
+            targets = self.shards.cache_shards()
+            if not targets:  # nothing cached anywhere: immediate miss
+                parent.t_completed = parent.t_arrival
+                self.metrics.completed.append(parent)
+                return
+        else:
+            nprobe = self.cfg.nprobe_shards or self.shards.num_shards
+            targets = [int(s) for s in self.shards.route(parent.qvec,
+                                                         nprobe)[0]]
+        self._fanout[parent.rid] = _Fanout(parent, set(targets))
+        for s in targets:
+            self.schedulers[s].submit(VectorRequest(
+                self._child_rid(parent.rid, s), parent.kind, parent.qvec,
+                parent.t_arrival, parent.deadline,
+                est_extends=parent.est_extends, parent_rid=parent.rid,
+                shard=s))
+        self.metrics.sub_searches += len(targets)
+
+    # ------------------------------------------------------------ inserts
+    def _broadcast_shard(self, s: int):
+        shard = self.shards.shards[s]
+        reps = self.shard_replicas(s)
+        for rep in reps:
+            rep.engine.set_index(shard.db, shard.graph)
+        self.metrics.broadcasts += len(reps)
+
+    def _apply_shard_insert(self, s: int, vec, neighbor_local_ids, meta,
+                            t_now: float):
+        gid, evicted = self.shards.insert_local(s, vec, neighbor_local_ids,
+                                                t_now=t_now)
+        for gone in evicted:
+            self.cache_meta.pop(gone, None)
+            self.metrics.cache_evictions += 1
+        if meta is not None:
+            self.cache_meta[gid] = meta
+        self.metrics.inserts += 1
+        self._broadcast_shard(s)
+        return gid
+
+    def _ensure_cache_replication(self, s: int):
+        """Cache-holding shards keep ≥ ``cfg.cache_replication`` replicas:
+        a single kill must never leave the answer cache unservable."""
+        want = max(self.cfg.cache_replication, 1)
+        while len(self.shard_replicas(s)) < want:
+            self._add_shard_replica(s)
+
+    def submit_insert(self, vec, meta=None, t_now: float = 0.0):
+        vec = np.asarray(vec, np.float32)
+        s = self.shards.owning_shard(vec)
+        self._ensure_cache_replication(s)
+        if self.shards.shards[s].cache_size == 0:
+            # empty owning-shard segment: nothing to search — place now
+            return self._apply_shard_insert(s, vec, None, meta, t_now)
+        rid = self._insert_rid
+        self._insert_rid += 1
+        self._insert_meta[rid] = meta
+        self._insert_shard[rid] = s
+        self.submit(VectorRequest(rid, "insert", vec, t_now, None))
+        return None
+
+    # ------------------------------------------------------- completions
+    def _on_complete(self, req: VectorRequest, rep: _Replica):
+        """A child finished on its shard: translate local→global ids,
+        fold into the parent's fan-out state, merge when all shards are
+        in."""
+        self.metrics.preempt_time += req.resume_wait
+        s = req.shard
+        fan = self._fanout.pop(req.parent_rid, None)
+        assert fan is not None, f"orphan child completion rid={req.rid}"
+        parent = fan.parent
+        if req.kind == "insert":
+            # single child; its shard-local result IS the neighbor list
+            self._apply_shard_insert(s, parent.qvec, req.result_ids,
+                                     self._insert_meta.pop(parent.rid, None),
+                                     t_now=req.t_completed)
+        else:
+            fan.ids.append(np.asarray(
+                self.shards.to_global(s, req.result_ids), np.int64))
+            fan.dists.append(np.asarray(req.result_dists, np.float32))
+        fan.extends += req.extends_used
+        fan.t_done = max(fan.t_done, req.t_completed)
+        if req.t_admitted is not None:
+            fan.t_admitted = (req.t_admitted if fan.t_admitted is None
+                              else min(fan.t_admitted, req.t_admitted))
+        fan.pending.discard(s)
+        if fan.pending:
+            self._fanout[req.parent_rid] = fan
+            return
+        self._finalize(fan)
+
+    def _finalize(self, fan: _Fanout):
+        from repro.kernels.ops import merge_partial_topk
+
+        parent = fan.parent
+        if fan.ids:
+            k = max(len(a) for a in fan.ids)
+            S_t = len(fan.ids)
+            ids = np.full((S_t, k), -1, np.int64)
+            dists = np.full((S_t, k), np.inf, np.float32)
+            for i, (a, d) in enumerate(zip(fan.ids, fan.dists)):
+                ids[i, :len(a)] = a
+                dists[i, :len(d)] = d
+            m_ids, m_d = merge_partial_topk(ids.astype(np.int32),
+                                            dists, k=k)
+            parent.result_ids = np.asarray(m_ids)
+            parent.result_dists = np.asarray(m_d)
+            self.metrics.merges += 1
+        parent.t_completed = fan.t_done
+        parent.extends_used = fan.extends
+        parent.t_admitted = fan.t_admitted  # earliest child seating (wait)
+        self.metrics.completed.append(parent)
+
+    # --------------------------------------------------------- membership
+    def _born_at(self, row: int) -> Optional[float]:
+        # Fresh gids do NOT make the slot-reuse guard redundant: child
+        # results translate local rows → gids at host-processing time, so
+        # a lookup whose logical completion predates an insert that host-
+        # order processed first resolves the slot's NEW gid — the shared
+        # meta_at guard rejects it via this hook
+        return self.shards.born_at(row)
+
+    def _healthy(self, rep: _Replica) -> bool:
+        """Straggler quarantine only helps when ANOTHER replica can drain
+        the same queue. A shard's sole replica must keep serving (slowly)
+        — quarantining it would starve that shard's private scheduler and
+        hang every fan-out parent forever."""
+        healthy = super()._healthy(rep)
+        if not healthy and not any(
+                r is not rep and not r.quarantined
+                for r in self.shard_replicas(rep.shard)):
+            rep.quarantined = False
+            return True
+        return healthy
+
+    @property
+    def cache_size(self) -> int:
+        return self.shards.cache_size
+
+    def kill_replica(self, idx: int):
+        """Fail-stop one replica. In-flight children re-queue on the
+        shard's scheduler (restart from scratch — device state is gone);
+        a shard left with NO replica is immediately re-homed on a fresh
+        one, so queued (shard-portable) checkpoints and re-queued children
+        keep a serving path."""
+        s = self.replicas[idx].shard
+        super().kill_replica(idx)
+        if not self.shard_replicas(s):
+            self._add_shard_replica(s)
+            self.metrics.shard_reassignments += 1
+
+    def add_replica(self):  # pragma: no cover - guarded by elastic=False
+        raise NotImplementedError(
+            "sharded pools add replicas per shard (_add_shard_replica)")

@@ -6,15 +6,53 @@ semantics. On a TPU backend the same call sites compile to Mosaic.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import distance as _dist
 from repro.kernels import flash_attention as _fa
 
+_INF = jnp.float32(1e30)
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_partial_topk(ids, dists, *, k: int):
+    """Scatter–gather merge: combine per-shard partial top-k lists into the
+    global top-k in ONE jitted fixed-shape dispatch.
+
+    ids (..., S, K) int32 — global row ids, −1 = padding (a shard
+    returning fewer than K valid rows pads with −1); dists (..., S, K)
+    f32; leading batch dims merge independently. Returns (ids (..., k)
+    int32, dists (..., k) f32) ascending by distance, −1/+INF padded when
+    fewer than ``k`` valid entries exist in total.
+
+    Shards partition the corpus, so a global id appears in at most one
+    shard's list — no cross-shard dedup pass is needed; the merge is one
+    ``top_k`` over the flattened S·K pool. Under exhaustive (exact)
+    per-shard search this merge is the monolithic exact top-k: every
+    global top-k member lives in exactly one shard and must appear in that
+    shard's local top-k (pinned by the hypothesis property test in
+    tests/test_properties.py). Ties break to the lower flat index (shard
+    order), matching jax.lax.top_k semantics.
+    """
+    pool = ids.shape[-2] * ids.shape[-1]
+    assert k <= pool, (k, ids.shape)
+    flat_ids = ids.reshape(ids.shape[:-2] + (pool,))
+    flat_d = jnp.where(flat_ids >= 0,
+                       dists.reshape(flat_ids.shape).astype(jnp.float32),
+                       _INF)
+    neg, sel = jax.lax.top_k(-flat_d, k)
+    out_d = -neg
+    out_ids = jnp.where(out_d < _INF,
+                        jnp.take_along_axis(flat_ids, sel, axis=-1), -1)
+    return out_ids, out_d
 
 
 def distance_tasks(db, queries, task_ids, task_slot, metric: str = "l2",

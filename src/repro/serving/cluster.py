@@ -37,7 +37,7 @@ import numpy as np
 from repro.core.architectures import make_placements
 from repro.core.roofline_model import V5E, Hardware
 from repro.core.scheduler import VectorRequest
-from repro.core.trinity_pool import VectorPool
+from repro.core.trinity_pool import ShardedVectorPool, VectorPool
 from repro.serving.engine import DecodeInstance, PrefillInstance
 from repro.serving.kv_cache import kv_bytes_per_token
 from repro.serving.kv_link import KVLink
@@ -76,9 +76,20 @@ class ClusterSim:
                                        else 1.0),
                            ep_penalty=pl.ep_dispatch_penalty)
             for i in range(n_decode)]
-        self.vector_pool = VectorPool(pool_cfg, db, graph,
-                                      replicas=vector_replicas, policy=policy,
-                                      use_pallas=use_pallas, seed=seed)
+        if pool_cfg is not None and pool_cfg.num_shards > 1:
+            # sharded scatter–gather pool: the corpus is partitioned into
+            # balanced-k-means shards (it may exceed one replica's
+            # replica_max_rows capacity); ``vector_replicas`` becomes the
+            # per-shard replica count and ``graph`` is unused (each shard
+            # builds its own)
+            self.vector_pool = ShardedVectorPool(
+                pool_cfg, db, replicas_per_shard=vector_replicas,
+                policy=policy, use_pallas=use_pallas, seed=seed)
+        else:
+            self.vector_pool = VectorPool(pool_cfg, db, graph,
+                                          replicas=vector_replicas,
+                                          policy=policy,
+                                          use_pallas=use_pallas, seed=seed)
         self.kv_link = KVLink(bandwidth=kv_link_bw)
 
         self.prefill_queue: deque[GenRequest] = deque()
@@ -145,23 +156,38 @@ class ClusterSim:
             .score_threshold
         meta = None
         if vreq.result_ids is not None and vreq.result_dists is not None:
+            t_fixed = (vreq.t_completed if vreq.t_completed is not None
+                       else self.t_now)
             for row, dist in zip(vreq.result_ids, vreq.result_dists):
                 if float(dist) <= thr:
-                    meta = self.vector_pool.cache_meta.get(int(row))
+                    # meta_at guards slot reuse: a row evicted and
+                    # re-filled after this lookup completed must not serve
+                    # the new occupant's answer for the old query
+                    meta = self.vector_pool.meta_at(int(row), t_fixed)
                     if meta is not None:
                         break
         if meta is None:
             self._start_miss_path(req)
             return
         # hit: serve the cached answer — the entire prefill→KV→decode
-        # pipeline is skipped; TTFT is the lookup round trip
+        # pipeline is skipped. The answer itself is NOT free: its tokens
+        # ship over the shared KV link (answer_bytes_per_token each), so a
+        # hit landing while a multi-MB prefill KV transfer is in flight
+        # queues behind it — TTFT = lookup round trip + transfer
         req.cache_hit = True
         req.tokens_out = int(meta["tokens"])
-        req.t_first_token = self.t_now
-        req.t_done = self.t_now
         self.metrics.cache_hits += 1
         self.metrics.saved_prefill_tokens += req.prompt_len
-        self.metrics.finished.append(req)
+        nbytes = req.tokens_out * self.pool_cfg.answer_bytes_per_token
+        t_ready = self.kv_link.transfer(self.t_now, nbytes) \
+            if nbytes else self.t_now
+
+        def _serve(r=req):
+            r.t_first_token = self.t_now
+            r.t_done = self.t_now
+            self.metrics.finished.append(r)
+
+        self.schedule(t_ready, _serve)
 
     def _finish_generation(self, req: GenRequest):
         """Completion hook: async-insert the (prompt embedding → answer)
@@ -399,3 +425,45 @@ class ClusterSim:
         def _slow(inst=self.decode_pool[idx]):
             inst.health.slowdown = factor
         return _slow
+
+
+def make_sharded_pool_sim(model_cfg=None, *, num_vectors: int = 6000,
+                          dim: int = 64, num_shards: int = 4,
+                          replica_max_rows: int = 2600,
+                          nprobe_shards: int = 0, seed: int = 11,
+                          pool_overrides: Optional[dict] = None,
+                          **cluster_kw):
+    """The ``sharded_pool`` scenario: a ClusterSim whose retrieval corpus is
+    deliberately sized PAST one replica's modeled HBM capacity
+    (``replica_max_rows < num_vectors``) — a monolithic ``VectorPool``
+    over it raises ``CapacityError``; the sharded scatter–gather pool
+    serves it with per-shard inserts and zero global broadcasts.
+
+    Returns (sim, db, queries). ``model_cfg=None`` uses the
+    phi3-medium-14b smoke config.
+    """
+    import dataclasses as _dc
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import VectorPoolConfig
+    from repro.vector.dataset import make_dataset
+
+    assert replica_max_rows < num_vectors, \
+        "the scenario exists to exceed one replica's capacity"
+    if model_cfg is None:
+        model_cfg = get_smoke_config("phi3-medium-14b")
+    pool_cfg = VectorPoolConfig(
+        num_vectors=num_vectors, dim=dim, graph_degree=16, max_requests=16,
+        top_m=32, parents_per_step=2, task_batch=2048, visited_slots=512,
+        top_k=10, semantic_cache_enabled=True, cache_capacity=128,
+        num_shards=num_shards, nprobe_shards=nprobe_shards,
+        replica_max_rows=replica_max_rows)
+    if pool_overrides:
+        pool_cfg = _dc.replace(pool_cfg, **pool_overrides)
+    db, queries = make_dataset(num_vectors, dim, num_clusters=32,
+                               num_queries=256, seed=seed)
+    defaults = dict(placement="disaggregated", policy="trinity",
+                    n_prefill=2, n_decode=2, decode_batch=8, seed=seed)
+    defaults.update(cluster_kw)
+    sim = ClusterSim(model_cfg, pool_cfg, db, None, **defaults)
+    return sim, db, queries

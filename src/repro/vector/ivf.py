@@ -5,8 +5,18 @@ lists exactly. Fixed-shape device layout (padded lists) so the same roofline
 arguments apply: per probed row, d MACs per d·4 gathered bytes — the same
 memory-bound regime as the graph engine, but with strictly more rows
 touched at equal recall (benchmarks show graph < IVF extend counts; that is
-WHY Trinity's engine is graph-based)."""
+WHY Trinity's engine is graph-based).
+
+The centroid machinery (``kmeans``) and the batched coarse quantizer
+(``coarse_probe``) are module-level so the sharded index
+(vector/shards.py) can reuse them: shard routing IS a coarse-quantizer
+pass, and it sits on the scatter–gather router's hot path. ``search`` is
+fully batched — one jitted fixed-shape dispatch per (Q, k, nprobe) shape
+instead of a per-call re-traced per-query closure.
+"""
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -14,24 +24,76 @@ import jax
 import jax.numpy as jnp
 
 
-class IVFFlat:
-    def __init__(self, db: np.ndarray, nlist: int = 64, iters: int = 10,
-                 seed: int = 0):
-        N, d = db.shape
-        rng = np.random.default_rng(seed)
-        centroids = db[rng.choice(N, nlist, replace=False)].astype(np.float32)
-        dbf = db.astype(np.float32)
-        for _ in range(iters):  # Lloyd's
-            d2 = (np.sum(dbf ** 2, 1)[:, None]
-                  - 2 * dbf @ centroids.T + np.sum(centroids ** 2, 1)[None])
-            assign = np.argmin(d2, 1)
-            for c in range(nlist):
-                members = dbf[assign == c]
-                if len(members):
-                    centroids[c] = members.mean(0)
+def kmeans(db: np.ndarray, nlist: int, iters: int = 10, seed: int = 0):
+    """Lloyd's k-means over ``db``. Returns (centroids (nlist, d) f32,
+    assign (N,) int64 — nearest-centroid assignment after the last step)."""
+    N, _ = db.shape
+    rng = np.random.default_rng(seed)
+    centroids = db[rng.choice(N, nlist, replace=False)].astype(np.float32)
+    dbf = db.astype(np.float32)
+    for _ in range(iters):
         d2 = (np.sum(dbf ** 2, 1)[:, None]
               - 2 * dbf @ centroids.T + np.sum(centroids ** 2, 1)[None])
         assign = np.argmin(d2, 1)
+        for c in range(nlist):
+            members = dbf[assign == c]
+            if len(members):
+                centroids[c] = members.mean(0)
+    d2 = (np.sum(dbf ** 2, 1)[:, None]
+          - 2 * dbf @ centroids.T + np.sum(centroids ** 2, 1)[None])
+    return centroids, np.argmin(d2, 1)
+
+
+@jax.jit
+def centroid_distances(centroids, queries):
+    """Batched query→centroid squared distances (Q, S) — the shared body
+    of the coarse quantizer and the sharded router's fine-centroid scoring
+    pass."""
+    q = queries.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    return (jnp.sum(q * q, 1)[:, None] - 2.0 * q @ c.T
+            + jnp.sum(c * c, 1)[None])
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def coarse_probe(centroids, queries, *, nprobe: int):
+    """Batched coarse quantizer: the ``nprobe`` nearest centroids per query.
+
+    centroids (S, d) · queries (Q, d). Returns (probe_ids (Q, nprobe) int32,
+    probe_d2 (Q, nprobe) f32) ordered nearest-first. One fixed-shape
+    dispatch; also the sharded router's shard-selection pass.
+    """
+    d2 = centroid_distances(centroids, queries)
+    neg, ids = jax.lax.top_k(-d2, nprobe)
+    return ids.astype(jnp.int32), -neg
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _ivf_search_batched(db, centroids, list_ids, queries, *, k: int,
+                        nprobe: int):
+    """Batched IVF scan: coarse probe + exact scan of the probed lists.
+
+    Returns (ids (Q, k), dists (Q, k), rows_scanned (Q,)). Identical math
+    to a vmap of the old per-query path (top_k along the last axis), but
+    traced ONCE per (Q, k, nprobe) shape at module level — repeat calls hit
+    the jit cache instead of re-tracing a fresh closure.
+    """
+    q = queries.astype(jnp.float32)
+    probe, _ = coarse_probe(centroids, q, nprobe=nprobe)  # (Q, nprobe)
+    Q = q.shape[0]
+    cand = list_ids[probe].reshape(Q, -1)  # (Q, nprobe*max_len)
+    x = db[jnp.maximum(cand, 0)]  # (Q, P, d)
+    dist = jnp.sum((x - q[:, None, :]) ** 2, -1)
+    dist = jnp.where(cand >= 0, dist, jnp.inf)
+    neg, sel = jax.lax.top_k(-dist, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    return ids, -neg, jnp.sum(cand >= 0, axis=1)
+
+
+class IVFFlat:
+    def __init__(self, db: np.ndarray, nlist: int = 64, iters: int = 10,
+                 seed: int = 0):
+        centroids, assign = kmeans(db, nlist, iters=iters, seed=seed)
         self.centroids = jnp.asarray(centroids)
         max_len = max(int((assign == c).sum()) for c in range(nlist))
         ids = np.full((nlist, max_len), -1, np.int32)
@@ -39,23 +101,12 @@ class IVFFlat:
             members = np.nonzero(assign == c)[0]
             ids[c, :len(members)] = members
         self.list_ids = jnp.asarray(ids)  # (nlist, max_len), -1 padded
-        self.db = jnp.asarray(dbf)
+        self.db = jnp.asarray(db.astype(np.float32))
         self.nlist = nlist
 
     def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 8):
         """Returns (ids (Q,k), dists (Q,k), rows_scanned (Q,))."""
-        q = jnp.asarray(queries, jnp.float32)
-
-        @jax.jit
-        def _one(qv):
-            cd = jnp.sum((self.centroids - qv) ** 2, 1)
-            probe = jax.lax.top_k(-cd, nprobe)[1]  # nearest lists
-            cand = self.list_ids[probe].reshape(-1)  # (nprobe*max_len,)
-            x = self.db[jnp.maximum(cand, 0)]
-            dist = jnp.sum((x - qv) ** 2, 1)
-            dist = jnp.where(cand >= 0, dist, jnp.inf)
-            top = jax.lax.top_k(-dist, k)
-            return cand[top[1]], -top[0], jnp.sum(cand >= 0)
-
-        ids, dists, rows = jax.vmap(_one)(q)
+        ids, dists, rows = _ivf_search_batched(
+            self.db, self.centroids, self.list_ids,
+            jnp.asarray(queries, jnp.float32), k=k, nprobe=nprobe)
         return np.asarray(ids), np.asarray(dists), np.asarray(rows)

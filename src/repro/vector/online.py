@@ -6,11 +6,15 @@ repro's index was frozen at construction. This module adds:
 
   · :class:`OnlineIndex` — the authoritative growable index arrays. Rows
     ``[0, base_n)`` are the frozen corpus segment (bit-untouched forever);
-    rows ``[base_n, base_n + cache_size)`` are the growable cache segment.
+    rows ``[base_n, base_n + cache_rows)`` are the growable cache segment.
     Capacity is *segmented*: the cache segment doubles when full, so only
     O(log growth) distinct array shapes (= jit specialisations) ever
-    exist, and every grown array is broadcast to all pool replicas by
-    ``VectorPool`` via ``engine.set_index``.
+    exist, and every grown array is broadcast to the owning pool replicas
+    by ``VectorPool`` via ``engine.set_index``. ``corpus_rows`` marks the
+    REAL corpus rows when the frozen segment is padded to a common shape
+    (sharded serving pads every shard to the largest shard's row count so
+    all shard engines share one compiled program); padding rows have no
+    edges, are never entry-sampled, and never surface in results.
 
   · :func:`insert_batch` — ONE jitted fixed-shape dispatch placing a batch
     of new nodes: scatter the vectors, set forward adjacency from the
@@ -20,6 +24,19 @@ repro's index was frozen at construction. This module adds:
     edge is shorter, keeping the fixed out-degree D cap. The patch loop is
     sequential over (batch, neighbor) pairs under ``lax.fori_loop`` —
     deterministic on every backend, and trivially cheap next to a search.
+
+  · Bounded growth (``ttl`` / ``max_entries``): the cache segment used to
+    only ever grow — ``cache_capacity`` doubled unbounded. With a TTL,
+    entries older than ``ttl`` seconds are evicted lazily at the next
+    insert; with ``max_entries``, the oldest live entries are evicted to
+    make room (insertion-order LRU). Evicted rows are *tombstoned* — db
+    row set far away (l2 only), own adjacency cleared, in-segment incoming
+    edges cut — pushed onto a free list, and REUSED by later inserts, so
+    the segment capacity is bounded by ``max_entries`` instead of the
+    total insert count. ``drain_evicted()`` hands the evicted global row
+    ids to the pool so stale answer metadata is dropped (an expired answer
+    can never hit). With both knobs off the arrays, the RNG stream and
+    every result are bit-identical to the unbounded path.
 
 Neighbor *selection* is search-based and lives in the serving path: an
 insert rides the scheduler as a deadline-less background-class request
@@ -41,6 +58,16 @@ import numpy as np
 
 from repro.vector.cagra import INF
 from repro.vector.graph import make_cagra_graph
+
+# l2 tombstone: any real vector is closer than this to any real query, so
+# an evicted row entry-sampled before its edges were cut still ranks dead
+# last and can never reach a top-k
+_TOMBSTONE = 1e6
+
+
+class CapacityError(RuntimeError):
+    """The index does not fit its owner's modeled HBM row budget
+    (``max_rows`` / ``VectorPoolConfig.replica_max_rows``)."""
 
 
 # NOTE: db/graph are deliberately NOT donated — every pool replica engine
@@ -100,23 +127,49 @@ def insert_batch(db, graph, rows, vecs, nbrs, *, metric: str = "l2"):
 
 
 class OnlineIndex:
-    """Capacity-segmented growable index shared by all pool replicas.
+    """Capacity-segmented growable index shared by its owning replicas.
 
-    Owns the device arrays; ``VectorPool`` broadcasts them to every
-    replica engine after each growth/insert (the arrays are shared jnp
+    Owns the device arrays; ``VectorPool`` broadcasts them to the owning
+    replica engines after each growth/insert (the arrays are shared jnp
     buffers — broadcast is a pointer swap, not a copy).
     """
 
     def __init__(self, db: np.ndarray, graph: np.ndarray, *,
                  cache_capacity: int = 0, metric: str = "l2",
-                 long_edges: int = 6, seed: int = 0):
+                 long_edges: int = 6, seed: int = 0,
+                 corpus_rows: Optional[int] = None,
+                 ttl: float = 0.0, max_entries: int = 0,
+                 max_rows: int = 0):
         db = np.asarray(db, np.float32)
         graph = np.asarray(graph, np.int32)
         self.base_n, self.dim = db.shape
+        # real corpus rows; rows [corpus_n, base_n) are shard padding
+        self.corpus_n = self.base_n if corpus_rows is None else corpus_rows
+        assert 0 <= self.corpus_n <= self.base_n
         self.degree = graph.shape[1]
         self.metric = metric
-        self.cache_size = 0
+        self.ttl = ttl
+        self.max_entries = max_entries
+        # total (frozen + cache) row budget — the owning replica's modeled
+        # HBM. Enforced at construction AND at every cache growth, so the
+        # capacity claim stays true under insert load, not just at t=0
+        self.max_rows = max_rows
+        if max_rows and self.base_n > max_rows:
+            raise CapacityError(
+                f"index needs {self.base_n} frozen rows but max_rows="
+                f"{max_rows}; shard the corpus "
+                f"(VectorPoolConfig.num_shards > 1)")
+        if (ttl > 0 or max_entries > 0) and metric != "l2":
+            # the db tombstone relies on l2 monotonicity (a far row is a
+            # bad row); ip has no universally-worst vector
+            raise ValueError("cache eviction requires metric='l2'")
+        self.cache_size = 0  # LIVE cache entries
+        self.cache_rows = 0  # high-water rows ever used (reuse keeps ≤ cap)
         self._cap = 0
+        self._free: List[int] = []  # evicted local slots available for reuse
+        self._t_insert = np.zeros(0, np.float64)  # per-local-slot timestamps
+        self._live = np.zeros(0, bool)
+        self._evicted: List[int] = []  # global rows evicted since last drain
         # NSW-style random long-range slots per inserted node — the same
         # navigability fix the offline builder applies, but denser: an
         # incrementally built graph has no NN-descent/global-kNN pass to
@@ -138,25 +191,57 @@ class OnlineIndex:
 
     @property
     def total_rows(self) -> int:
-        return self.base_n + self.cache_size
+        return self.base_n + self.cache_rows
 
     def entry_range(self, segment: str):
         """Entry-point sampling range [lo, hi) for a retrieval-class
-        segment. The cache range only covers FILLED rows."""
+        segment. The cache range covers rows ever used (tombstoned rows in
+        it rank dead last); corpus excludes shard-padding rows."""
         if segment == "cache":
-            return self.base_n, self.base_n + self.cache_size
-        return 0, self.base_n
+            return self.base_n, self.base_n + self.cache_rows
+        return 0, self.corpus_n
 
     def cache_vectors(self) -> np.ndarray:
-        return np.asarray(self.db)[self.base_n:self.base_n + self.cache_size]
+        return np.asarray(self.db)[self.base_n:self.base_n + self.cache_rows]
+
+    def is_live(self, global_row: int) -> bool:
+        loc = global_row - self.base_n
+        return 0 <= loc < self.cache_rows and bool(self._live[loc])
+
+    def born_at(self, global_row: int) -> Optional[float]:
+        """Insert timestamp of the row's CURRENT occupant (None if not a
+        live cache row) — lets callers reject results that resolved a row
+        before its slot was evicted and re-filled."""
+        loc = global_row - self.base_n
+        if 0 <= loc < self.cache_rows and self._live[loc]:
+            return float(self._t_insert[loc])
+        return None
+
+    def drain_evicted(self) -> List[int]:
+        """Global row ids evicted since the last drain (the pool drops
+        their answer metadata so an expired entry can never serve)."""
+        out, self._evicted = self._evicted, []
+        return out
 
     # ----------------------------------------------------------- growth
+    def _budget_error(self, rows_needed: int) -> "CapacityError":
+        return CapacityError(
+            f"cache growth to {rows_needed} rows exceeds the replica row "
+            f"budget ({self.max_rows} total, {self.max_rows - self.base_n} "
+            f"for the cache); bound the segment "
+            f"(cache_max_entries/cache_ttl_s) or re-shard")
+
     def _grow(self, min_extra: int):
         """Double the cache segment (capacity-segmented growth: O(log N)
         distinct shapes → O(log N) jit specialisations ever compiled)."""
         new_cap = max(64, 2 * self._cap)
-        while new_cap < self.cache_size + min_extra:
+        while new_cap < self.cache_rows + min_extra:
             new_cap *= 2
+        if self.max_rows:
+            allowed = self.max_rows - self.base_n
+            if self.cache_rows + min_extra > allowed:
+                raise self._budget_error(self.cache_rows + min_extra)
+            new_cap = min(new_cap, allowed)
         total = self.base_n + new_cap
         db = np.zeros((total, self.dim), np.float32)
         graph = np.full((total, self.degree), -1, np.int32)
@@ -164,47 +249,110 @@ class OnlineIndex:
         db[:old_rows] = np.asarray(self.db)
         graph[:old_rows] = np.asarray(self.graph)
         self._cap = new_cap
+        self._t_insert = np.concatenate(
+            [self._t_insert, np.zeros(new_cap - len(self._t_insert))])
+        self._live = np.concatenate(
+            [self._live, np.zeros(new_cap - len(self._live), bool)])
         self.db = jnp.asarray(db)
         self.graph = jnp.asarray(graph)
 
+    # --------------------------------------------------------- eviction
+    def _evict_locals(self, locals_: Sequence[int]):
+        """Tombstone cache rows: db far away, own adjacency cleared,
+        in-segment incoming edges cut; slots return to the free list."""
+        if not len(locals_):
+            return
+        g = np.asarray([self.base_n + int(x) for x in locals_], np.int32)
+        self.db = self.db.at[g].set(jnp.float32(_TOMBSTONE))
+        self.graph = self.graph.at[g].set(-1)
+        seg = self.graph[self.base_n:]
+        if seg.shape[0]:
+            hit = jnp.isin(seg, jnp.asarray(g))
+            self.graph = self.graph.at[self.base_n:].set(
+                jnp.where(hit, -1, seg))
+        for loc in locals_:
+            loc = int(loc)
+            self._live[loc] = False
+            self._free.append(loc)
+        self._free.sort()  # deterministic reuse order (lowest slot first)
+        self._evicted.extend(int(x) for x in g)
+        self.cache_size -= len(locals_)
+
+    def _evict_for(self, batch: int, t_now: float):
+        """Lazy eviction ahead of an insert batch: expired entries first
+        (TTL), then oldest live entries until the batch fits under the
+        ``max_entries`` cap."""
+        if self.ttl > 0:
+            expired = np.flatnonzero(
+                self._live[:self.cache_rows]
+                & (self._t_insert[:self.cache_rows] + self.ttl <= t_now))
+            self._evict_locals(expired.tolist())
+        if self.max_entries > 0:
+            over = self.cache_size + batch - self.max_entries
+            if over > 0:
+                live = np.flatnonzero(self._live[:self.cache_rows])
+                order = np.argsort(self._t_insert[live], kind="stable")
+                self._evict_locals(live[order][:over].tolist())
+
     # ---------------------------------------------------------- inserts
     def insert(self, vec: np.ndarray,
-               neighbor_ids: Optional[Sequence[int]] = None) -> int:
+               neighbor_ids: Optional[Sequence[int]] = None,
+               t_now: float = 0.0) -> int:
         """Insert one vector; returns its global row id."""
-        return self.insert_many([vec], [neighbor_ids])[0]
+        return self.insert_many([vec], [neighbor_ids], t_now=t_now)[0]
 
-    def insert_many(self, vecs, neighbor_lists) -> List[int]:
+    def insert_many(self, vecs, neighbor_lists,
+                    t_now: float = 0.0) -> List[int]:
         """Insert B vectors in one ``insert_batch`` dispatch.
 
         ``neighbor_lists[i]`` holds the search-selected candidate ids for
-        vector i (global ids; anything outside the already-filled cache
-        segment — corpus ids, −1 padding, this batch's own rows — is
-        filtered host-side; at most ``degree`` survive)."""
+        vector i (global ids; anything outside the live cache segment —
+        corpus ids, −1 padding, tombstoned rows, this batch's own rows —
+        is filtered host-side; at most ``degree`` survive)."""
         B = len(vecs)
-        if self.cache_size + B > self._cap:
-            self._grow(B)
-        rows = [self.base_n + self.cache_size + i for i in range(B)]
+        self._evict_for(B, t_now)
+        # allocate local slots: reuse evicted slots first, then high-water.
+        # The row-budget check runs BEFORE any allocation state commits, so
+        # a CapacityError leaves the index consistent (free list intact,
+        # cache_rows within capacity) — evictions already applied above
+        # are themselves valid state, and their retired rows fail the
+        # liveness guards, so stale pool metadata can never serve
+        reuse = self._free[:B]
+        new_high = self.cache_rows + (B - len(reuse))
+        if self.max_rows and self.base_n + new_high > self.max_rows:
+            raise self._budget_error(new_high)
+        locs = reuse + list(range(self.cache_rows, new_high))
+        del self._free[:len(reuse)]
+        self.cache_rows = new_high
+        if self.cache_rows > self._cap:
+            self._grow(0)
+        rows = [self.base_n + loc for loc in locs]
         nbrs = np.full((B, self.degree), -1, np.int32)
         lo = self.base_n
-        hi = self.base_n + self.cache_size  # only already-filled rows
+        hi = self.base_n + self.cache_rows
+        live_locs = np.flatnonzero(self._live[:self.cache_rows])
+        n_live = len(live_locs)
         for i, cand in enumerate(neighbor_lists):
             keep = []
             if cand is not None:
                 seen = set()
                 for c in cand:
                     c = int(c)
-                    if lo <= c < hi and c not in seen:
+                    if lo <= c < hi and c not in seen \
+                            and self._live[c - lo]:
                         keep.append(c)
                         seen.add(c)
                 keep = keep[:self.degree - self.long_edges]
             # random in-segment long-range edges in the reserved tail
-            # slots, deduped against the short edges AND each other —
+            # slots, drawn over LIVE rows only (identical RNG stream and
+            # values to the pre-eviction range draw when nothing was ever
+            # evicted), deduped against the short edges AND each other —
             # duplicate draws (likely on small segments) must not waste
             # fixed-degree adjacency slots
-            n_long = min(self.long_edges, max(hi - lo, 0))
-            if n_long and hi > lo:
-                for x in self._rng.integers(lo, hi, size=n_long):
-                    x = int(x)
+            n_long = min(self.long_edges, n_live)
+            if n_long:
+                for x in self._rng.integers(0, n_live, size=n_long):
+                    x = lo + int(live_locs[int(x)])
                     if x not in keep:
                         keep.append(x)
             nbrs[i, :len(keep)] = keep[:self.degree]
@@ -217,6 +365,9 @@ class OnlineIndex:
         self.db, self.graph = insert_batch(
             self.db, self.graph, jnp.asarray(rows_p), jnp.asarray(vecs_p),
             jnp.asarray(nbrs_p), metric=self.metric)
+        for loc in locs:
+            self._live[loc] = True
+            self._t_insert[loc] = t_now
         self.cache_size += B
         return rows
 
@@ -228,12 +379,12 @@ class OnlineIndex:
         (tests/test_online_insert.py; acceptance: ≥ 0.95× oracle)."""
         # the offline builder needs k0 = min(2D, N−1) ≥ D − long_edges
         # columns; below ~degree rows it would fail with a shape error
-        if self.cache_size < self.degree:
+        if self.cache_rows < self.degree:
             raise ValueError(
                 f"cache segment too small to rebuild "
-                f"({self.cache_size} < degree {self.degree})")
+                f"({self.cache_rows} < degree {self.degree})")
         seg = make_cagra_graph(self.cache_vectors(), self.degree, seed=seed,
                                id_offset=self.base_n)
         graph = np.asarray(self.graph).copy()
-        graph[self.base_n:self.base_n + self.cache_size] = seg
+        graph[self.base_n:self.base_n + self.cache_rows] = seg
         return graph

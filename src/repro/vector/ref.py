@@ -6,7 +6,8 @@ import numpy as np
 
 def exact_knn(db: np.ndarray, queries: np.ndarray, k: int,
               metric: str = "l2", block: int = 1024):
-    """Brute-force top-k. Returns (ids (Q,k), dists (Q,k))."""
+    """Brute-force top-k (k ≤ N). Returns (ids (Q,k), dists (Q,k))."""
+    assert k <= db.shape[0], (k, db.shape)
     Q = queries.shape[0]
     ids = np.zeros((Q, k), np.int32)
     dists = np.zeros((Q, k), np.float32)
@@ -19,7 +20,11 @@ def exact_knn(db: np.ndarray, queries: np.ndarray, k: int,
             d = -(q @ db.T)
         else:
             raise ValueError(metric)
-        idx = np.argpartition(d, k, axis=1)[:, :k]
+        if k < db.shape[0]:
+            idx = np.argpartition(d, k, axis=1)[:, :k]
+        else:  # k == N: argpartition needs kth < N; every row is top-k
+            idx = np.argsort(d, axis=1, kind="stable")
+
         dd = np.take_along_axis(d, idx, axis=1)
         order = np.argsort(dd, axis=1)
         ids[s:s + block] = np.take_along_axis(idx, order, axis=1)

@@ -1,0 +1,273 @@
+"""Sharded vector index: grow the pool past one device's memory.
+
+A single ``OnlineIndex`` binds corpus capacity to one replica's HBM and
+makes every insert broadcast grown arrays to *all* replicas. This module
+partitions the corpus into S shards via IVF-style balanced k-means
+(reusing the centroid machinery in ``vector/ivf.py``), each shard a fully
+self-contained :class:`~repro.vector.online.OnlineIndex` — frozen segment
++ growable cache segment — owned by one or more pool replicas
+(``core/trinity_pool.ShardedVectorPool`` is the scatter–gather router).
+
+Shape discipline: every shard's frozen segment is padded to the LARGEST
+shard's row count (``pad_n``), so all shard engines share one compiled
+program — a sub-search differs from any other only in traced per-slot
+entry bounds. Padding rows have no out-edges, are never entry-sampled
+(``OnlineIndex.corpus_rows`` caps the sampling range), and no real row
+points at them, so they are unreachable and never surface in results.
+
+Id spaces: engines and ``OnlineIndex`` operate in shard-LOCAL row ids;
+results are translated to GLOBAL ids host-side (``to_global``) before the
+scatter–gather merge. Frozen local rows map to their original corpus row;
+cache rows get globally-unique ids assigned at insert time
+(``[n, n + total inserts)``), stable across eviction/reuse of the
+underlying slot — a reused slot gets a FRESH global id, so a stale result
+can never alias a newer answer's id.
+
+Routing: shard selection IS a coarse-quantizer pass
+(``ivf.coarse_probe`` over the shard centroids). Fan-out-all (``nprobe >=
+S``) merged with ``kernels.ops.merge_partial_topk`` is exact under
+exhaustive per-shard search (shards partition the corpus — pinned by the
+hypothesis property test); ``nprobe < S`` trades recall for fan-out on the
+measured curve in benchmarks/BENCH_sharded.json. Online inserts route to
+the OWNING shard only (nearest centroid): no global array broadcast.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.vector.ivf import centroid_distances, kmeans
+from repro.vector.online import OnlineIndex
+from repro.vector.ref import exact_knn
+
+
+def balanced_partition(db: np.ndarray, num_shards: int, *, iters: int = 8,
+                       seed: int = 0):
+    """Capacity-constrained k-means partition of ``db`` into ``num_shards``
+    near-equal shards.
+
+    Lloyd's centroids first (``ivf.kmeans``); then points are assigned in
+    ascending best-distance order, each to its nearest centroid with
+    remaining capacity (cap = ⌈N/S⌉). Deterministic; every point is
+    assigned exactly once. Returns (centroids (S, d) f32, parts: list of S
+    sorted global-row-id arrays).
+    """
+    N = db.shape[0]
+    S = num_shards
+    assert S >= 1
+    if S == 1:
+        return (db.astype(np.float32).mean(0, keepdims=True),
+                [np.arange(N, dtype=np.int64)])
+    centroids, _ = kmeans(db, S, iters=iters, seed=seed)
+    dbf = db.astype(np.float32)
+    d2 = (np.sum(dbf ** 2, 1)[:, None] - 2 * dbf @ centroids.T
+          + np.sum(centroids ** 2, 1)[None])  # (N, S)
+    cap = math.ceil(N / S)
+    order = np.argsort(d2.min(1), kind="stable")
+    pref = np.argsort(d2, 1, kind="stable")
+    counts = np.zeros(S, np.int64)
+    assign = np.full(N, -1, np.int64)
+    for i in order:
+        for c in pref[i]:
+            if counts[c] < cap:
+                assign[i] = c
+                counts[c] += 1
+                break
+    parts = [np.flatnonzero(assign == s).astype(np.int64) for s in range(S)]
+    return centroids, parts
+
+
+class ShardedIndex:
+    """S self-contained shard indexes + centroid router + id translation.
+
+    ``build_graphs=False`` skips the per-shard CAGRA builds (and the
+    ``OnlineIndex`` construction): only the partition, the router and
+    ``exact_search`` work — enough for the merge-exactness property tests
+    without paying S graph builds per example.
+    """
+
+    def __init__(self, db: np.ndarray, *, num_shards: int, degree: int = 16,
+                 metric: str = "l2", cache_capacity: int = 0,
+                 kmeans_iters: int = 8, long_edges: int = 6, seed: int = 0,
+                 ttl: float = 0.0, max_entries: int = 0, max_rows: int = 0,
+                 route_centroids: int = 4, build_graphs: bool = True):
+        db = np.asarray(db, np.float32)
+        self.db = db  # full corpus (host view; device arrays live per shard)
+        self.n, self.dim = db.shape
+        self.num_shards = num_shards
+        self.metric = metric
+        self.degree = degree
+        centroids, parts = balanced_partition(db, num_shards,
+                                              iters=kmeans_iters, seed=seed)
+        self.centroids = centroids
+        self.shard_rows: List[np.ndarray] = parts  # frozen local → global
+        self.pad_n = max(len(p) for p in parts)  # common frozen-segment rows
+        self.shards: List[Optional[OnlineIndex]] = []
+        self._global_of: List[np.ndarray] = []  # per-shard local → global id
+        for s, rows in enumerate(parts):
+            gmap = np.full(self.pad_n, -1, np.int64)
+            gmap[:len(rows)] = rows
+            self._global_of.append(gmap)
+            if build_graphs:
+                sdb = np.zeros((self.pad_n, self.dim), np.float32)
+                sdb[:len(rows)] = db[rows]
+                sgraph = np.full((self.pad_n, degree), -1, np.int32)
+                if len(rows):
+                    sgraph[:len(rows)] = make_shard_graph(db[rows], degree,
+                                                          seed=seed + s)
+                self.shards.append(OnlineIndex(
+                    sdb, sgraph, cache_capacity=cache_capacity,
+                    metric=metric, long_edges=long_edges, seed=seed + s,
+                    corpus_rows=len(rows), ttl=ttl, max_entries=max_entries,
+                    max_rows=max_rows))
+            else:
+                self.shards.append(None)
+        # globally-unique cache ids: [n, n + total inserts), never reused
+        self._next_cache_gid = self.n
+        self._gid_loc: Dict[int, Tuple[int, int]] = {}  # gid → (shard, local)
+        # fine routing centroids: the balanced (capacity-capped) partition
+        # SPLITS popular k-means cells across shards, so one centroid per
+        # shard under-describes a shard's territory and nearest-shard-
+        # centroid routing misses the spilled regions (measured: recall
+        # 0.82 → 0.96 at nprobe = S/2 on the clustered bench corpus).
+        # Each shard contributes ≤ route_centroids sub-centroids; a
+        # shard's routing score is the MIN distance over its own
+        fine, fine_shards, fine_counts = [], [], []
+        for s, rows in enumerate(parts):
+            f = min(route_centroids, len(rows))
+            if f == 0:
+                continue
+            if f < 2:
+                c = db[rows].mean(0, keepdims=True)
+            else:
+                c, _ = kmeans(db[rows], f, iters=max(kmeans_iters // 2, 2),
+                              seed=seed + 101 + s)
+            fine.append(c)
+            fine_shards.append(s)
+            fine_counts.append(len(c))
+        self._fine_centroids = np.concatenate(fine).astype(np.float32)
+        # reduceat segment starts: fine blocks are contiguous per shard
+        self._fine_starts = np.concatenate(
+            [[0], np.cumsum(fine_counts)[:-1]]).astype(np.int64)
+        self._fine_shards = np.asarray(fine_shards, np.int64)
+
+    # ------------------------------------------------------------ routing
+    def route(self, queries: np.ndarray, nprobe: int) -> np.ndarray:
+        """The ``nprobe`` best shards per query, best-first — ONE batched
+        centroid-distance dispatch over the fine sub-centroids (the
+        router's hot path) + one vectorized per-shard segment-min."""
+        nprobe = max(1, min(nprobe, self.num_shards))
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        d2 = np.asarray(centroid_distances(self._fine_centroids, q))
+        score = np.full((q.shape[0], self.num_shards), np.inf, np.float32)
+        score[:, self._fine_shards] = np.minimum.reduceat(
+            d2, self._fine_starts, axis=1)
+        return np.argsort(score, 1, kind="stable")[:, :nprobe]
+
+    def owning_shard(self, vec: np.ndarray) -> int:
+        """The shard that owns an inserted vector (nearest centroid)."""
+        return int(self.route(vec, 1)[0, 0])
+
+    def cache_shards(self) -> List[int]:
+        """Shards currently holding live cache entries."""
+        return [s for s, sh in enumerate(self.shards)
+                if sh is not None and sh.cache_size > 0]
+
+    # ---------------------------------------------------- id translation
+    def to_global(self, s: int, local_ids: np.ndarray) -> np.ndarray:
+        """Shard-local result rows → global ids (−1 stays −1; tombstoned
+        slots map to −1 too — their gid died with the eviction)."""
+        gmap = self._global_of[s]
+        ids = np.asarray(local_ids, np.int64)
+        safe = np.clip(ids, 0, len(gmap) - 1)
+        out = gmap[safe]
+        return np.where((ids >= 0) & (ids < len(gmap)), out, -1)
+
+    def _ensure_map(self, s: int, rows_needed: int):
+        gmap = self._global_of[s]
+        if rows_needed > len(gmap):
+            self._global_of[s] = np.concatenate(
+                [gmap, np.full(rows_needed - len(gmap), -1, np.int64)])
+
+    # ------------------------------------------------------------ inserts
+    def insert_local(self, s: int, vec: np.ndarray,
+                     neighbor_local_ids: Optional[Sequence[int]],
+                     t_now: float = 0.0) -> Tuple[int, List[int]]:
+        """Insert into shard ``s`` (neighbors already in shard-local ids —
+        they come straight from a sub-search on that shard's engine).
+
+        Returns (gid, evicted_gids): the new entry's global id and the
+        global ids TTL/capacity eviction retired (the pool drops their
+        answer metadata)."""
+        shard = self.shards[s]
+        local_row = shard.insert(vec, neighbor_local_ids, t_now=t_now)
+        evicted = []
+        for loc in shard.drain_evicted():
+            gmap = self._global_of[s]
+            if loc < len(gmap) and gmap[loc] >= 0:
+                gid = int(gmap[loc])
+                evicted.append(gid)
+                self._gid_loc.pop(gid, None)
+                gmap[loc] = -1
+        gid = self._next_cache_gid
+        self._next_cache_gid += 1
+        self._ensure_map(s, local_row + 1)
+        self._global_of[s][local_row] = gid
+        self._gid_loc[gid] = (s, local_row)
+        return gid, evicted
+
+    @property
+    def cache_size(self) -> int:
+        return sum(sh.cache_size for sh in self.shards if sh is not None)
+
+    def born_at(self, gid: int) -> Optional[float]:
+        """Insert timestamp of a live cache gid (None if evicted/unknown)
+        — TTL expiry is judged at serve time by the pool."""
+        loc = self._gid_loc.get(gid)
+        if loc is None:
+            return None
+        s, shard_row = loc  # already in shard-row space (base_n + slot)
+        return self.shards[s].born_at(shard_row)
+
+    # ------------------------------------------------- exact (oracle) path
+    def exact_search(self, queries: np.ndarray, k: int,
+                     shard_lists: Optional[np.ndarray] = None):
+        """Exhaustive per-shard top-k over the frozen corpus, merged.
+
+        ``shard_lists`` (Q, nprobe) restricts each query to its routed
+        shards (None = fan-out-all). Fan-out-all equals the monolithic
+        exact oracle: shards partition the corpus, so the merge of exact
+        per-shard top-k IS the global top-k. Returns (ids (Q, k) global,
+        dists (Q, k)) — both padded (−1 / +inf) when fewer than k rows are
+        reachable."""
+        from repro.kernels.ops import merge_partial_topk  # local: avoid cycle
+
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        Q = q.shape[0]
+        S = self.num_shards
+        all_ids = np.full((Q, S, k), -1, np.int64)
+        all_d = np.full((Q, S, k), np.inf, np.float32)
+        for s, rows in enumerate(self.shard_rows):
+            ns = len(rows)
+            if ns == 0:
+                continue
+            kk = min(k, ns)
+            ids_l, d = exact_knn(self.db[rows], q, kk, metric=self.metric)
+            all_ids[:, s, :kk] = rows[ids_l]
+            all_d[:, s, :kk] = d
+        if shard_lists is not None:
+            mask = np.zeros((Q, S), bool)
+            np.put_along_axis(mask, np.asarray(shard_lists), True, axis=1)
+            all_ids = np.where(mask[:, :, None], all_ids, -1)
+        ids, dists = merge_partial_topk(
+            all_ids.astype(np.int32), all_d.astype(np.float32), k=k)
+        return np.asarray(ids), np.asarray(dists)
+
+
+def make_shard_graph(vecs: np.ndarray, degree: int, seed: int = 0):
+    """CAGRA build over one shard's vectors in shard-LOCAL id space."""
+    from repro.vector.graph import make_cagra_graph
+
+    return make_cagra_graph(vecs, degree, seed=seed)

@@ -16,12 +16,17 @@ no baseline behavior.
 Regenerate (only if the workload itself changes, never to paper over a
 behavior change):
     PYTHONPATH=src:tests python -m scheduler_trace_driver
+
+Verify without touching the recorded file (CI runs this on every PR so a
+baseline-policy drift breaks loudly even if the pytest pin were skipped):
+    PYTHONPATH=src:tests python -m scheduler_trace_driver --check
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import sys
 
 import numpy as np
 
@@ -121,9 +126,7 @@ def run_trace(scheduler_factory, make_request, policy: str = "trinity"):
     return log
 
 
-def record():
-    """Record the trace with the repo's current scheduler (run this ONLY
-    against the pre-refactor baseline)."""
+def _run_all():
     from repro.configs.base import VectorPoolConfig
     from repro.core.scheduler import TwoQueueScheduler, VectorRequest
 
@@ -136,9 +139,15 @@ def record():
     def make_request(rid, kind, qvec, t, ddl, est):
         return VectorRequest(rid, kind, qvec, t, ddl, est_extends=est)
 
-    out = {policy: run_trace(factory, make_request, policy)
-           for policy in ("trinity", "prefill_first", "decode_first",
-                          "fifo_shared")}
+    return {policy: run_trace(factory, make_request, policy)
+            for policy in ("trinity", "prefill_first", "decode_first",
+                           "fifo_shared")}
+
+
+def record():
+    """Record the trace with the repo's current scheduler (run this ONLY
+    against the pre-refactor baseline)."""
+    out = _run_all()
     os.makedirs(os.path.dirname(DATA_PATH), exist_ok=True)
     with open(DATA_PATH, "w") as f:
         json.dump(out, f, sort_keys=True)
@@ -146,5 +155,34 @@ def record():
     print(f"wrote {DATA_PATH}: {sizes}")
 
 
+def check() -> int:
+    """Replay the workload through the CURRENT scheduler and diff against
+    the recorded trace. Exit 0 on bit-identity, 1 on any drift (with the
+    first diverging decision printed). Never rewrites the file."""
+    with open(DATA_PATH) as f:
+        recorded = json.load(f)
+    current = _run_all()
+    # JSON round-trip the replay so tuples/lists compare like the record
+    current = json.loads(json.dumps(current))
+    ok = True
+    for policy, want in recorded.items():
+        got = current.get(policy, [])
+        if got == want:
+            continue
+        ok = False
+        for i, (g, w) in enumerate(zip(got, want)):
+            if g != w:
+                print(f"TRACE DRIFT [{policy}] entry {i}: "
+                      f"got {g!r} want {w!r}")
+                break
+        else:
+            print(f"TRACE DRIFT [{policy}]: length {len(got)} vs "
+                  f"{len(want)}")
+    print("trace bit-identity:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
+    if "--check" in sys.argv[1:]:
+        sys.exit(check())
     record()

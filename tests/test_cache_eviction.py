@@ -1,0 +1,218 @@
+"""Bounded cache segment (vector/online.py): TTL + capacity-cap eviction,
+slot reuse, tombstone unreachability, and pool-level metadata retirement."""
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.continuous_batching import ContinuousBatchingEngine, SlotParams
+from repro.core.trinity_pool import VectorPool
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+from repro.vector.online import OnlineIndex
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(1200, 32, num_clusters=8, num_queries=16,
+                               seed=5)
+    graph = make_cagra_graph(db, degree=16, seed=5)
+    return db, graph, queries
+
+
+def _vec(rng):
+    return rng.normal(size=32).astype(np.float32)
+
+
+def test_capacity_cap_bounds_segment_and_reuses_slots(setup):
+    """With max_entries, live count and high-water rows stay at the cap and
+    capacity stops doubling — evicted slots are reused by later inserts."""
+    db, graph, _ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16, max_entries=8)
+    rng = np.random.default_rng(0)
+    caps = set()
+    for i in range(200):
+        idx.insert(_vec(rng), t_now=float(i))
+        caps.add(idx.cache_capacity)
+    assert idx.cache_size == 8
+    assert idx.cache_rows == 8  # slots reused, never 200 rows
+    assert caps == {64}  # capacity pinned at the floor, no doubling
+    assert len(idx.drain_evicted()) == 192
+
+
+def test_capacity_cap_evicts_oldest_first(setup):
+    db, graph, _ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16, max_entries=2)
+    rng = np.random.default_rng(1)
+    r0 = idx.insert(_vec(rng), t_now=0.0)
+    r1 = idx.insert(_vec(rng), t_now=1.0)
+    idx.insert(_vec(rng), t_now=2.0)
+    assert idx.drain_evicted() == [r0]
+    idx.insert(_vec(rng), t_now=3.0)
+    assert idx.drain_evicted() == [r1]
+
+
+def test_ttl_expires_and_reuses(setup):
+    db, graph, _ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16, ttl=1.0)
+    rng = np.random.default_rng(2)
+    r0 = idx.insert(_vec(rng), t_now=0.0)
+    r1 = idx.insert(_vec(rng), t_now=0.5)
+    r2 = idx.insert(_vec(rng), t_now=2.0)  # both earlier entries expired
+    assert set(idx.drain_evicted()) == {r0, r1}
+    assert idx.cache_size == 1
+    assert r2 == r0  # lowest freed slot reused first
+
+
+def test_eviction_requires_l2():
+    db = np.zeros((4, 8), np.float32)
+    graph = np.full((4, 2), -1, np.int32)
+    with pytest.raises(ValueError, match="l2"):
+        OnlineIndex(db, graph, metric="ip", ttl=1.0)
+
+
+def test_evicted_rows_never_surface_in_searches(setup):
+    """Tombstoned rows: far-away db row + all in-segment edges cut — a
+    cache-segment search over the live entries never returns one."""
+    db, graph, queries = setup
+    cfg = VectorPoolConfig(num_vectors=1200, dim=32, graph_degree=16,
+                           max_requests=8, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=4)
+    idx = OnlineIndex(db, graph, cache_capacity=16, max_entries=6)
+    rng = np.random.default_rng(3)
+    rows = [idx.insert(_vec(rng), t_now=float(i),
+                       neighbor_ids=None) for i in range(12)]
+    evicted = set(idx.drain_evicted())
+    assert evicted == set(rows[:6])
+    live = set(rows[6:])
+    eng = ContinuousBatchingEngine(cfg, idx.db, idx.graph, use_pallas=False,
+                                   seed=0, corpus_rows=idx.corpus_n)
+    lo, hi = idx.entry_range("cache")
+    for qi in range(8):
+        eng.admit(qi, queries[qi], SlotParams(entry_lo=lo, entry_hi=hi))
+    for _, ids, dists, _ in eng.run_to_completion():
+        for rid_, d in zip(ids, dists):
+            if d < 1e29:
+                assert int(rid_) in live
+
+
+def test_corpus_rows_untouched_by_eviction(setup):
+    db, graph, _ = setup
+    idx = OnlineIndex(db, graph, cache_capacity=16, max_entries=4)
+    rng = np.random.default_rng(4)
+    for i in range(20):
+        idx.insert(_vec(rng), t_now=float(i))
+    np.testing.assert_array_equal(np.asarray(idx.db)[:1200], db)
+    np.testing.assert_array_equal(np.asarray(idx.graph)[:1200], graph)
+
+
+def test_unbounded_path_bit_identical_to_legacy(setup):
+    """Knobs off => the arrays (and the RNG stream feeding long edges) are
+    bit-identical to the pre-eviction implementation."""
+    db, graph, _ = setup
+    a = OnlineIndex(db, graph, cache_capacity=16, seed=7)
+    b = OnlineIndex(db, graph, cache_capacity=16, seed=7,
+                    ttl=0.0, max_entries=0)
+    rng = np.random.default_rng(5)
+    vs = [_vec(rng) for _ in range(40)]
+    for v in vs:
+        a.insert(v)
+    for v in vs:
+        b.insert(v)
+    np.testing.assert_array_equal(np.asarray(a.db), np.asarray(b.db))
+    np.testing.assert_array_equal(np.asarray(a.graph), np.asarray(b.graph))
+    assert a.cache_size == b.cache_size == 40
+    assert not a.drain_evicted() and not b.drain_evicted()
+
+
+def test_pool_drops_meta_for_evicted_entries(setup):
+    """Pool-level: an evicted entry's answer metadata is retired, so an
+    expired answer can never serve a semantic-cache hit."""
+    db, graph, _ = setup
+    cfg = VectorPoolConfig(num_vectors=1200, dim=32, graph_degree=16,
+                           max_requests=8, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=4,
+                           semantic_cache_enabled=True, cache_capacity=16,
+                           cache_max_entries=3)
+    pool = VectorPool(cfg, db, graph, use_pallas=False, seed=0)
+    rng = np.random.default_rng(6)
+    t = 0.0
+    for i in range(8):
+        pool.submit_insert(_vec(rng), meta={"tokens": i}, t_now=t)
+        t += 5e-4
+        pool.run_until(t)
+    pool.run_until(t + 1.0)
+    assert pool.metrics.inserts == 8
+    assert pool.cache_size == 3
+    assert pool.metrics.cache_evictions == 5
+    assert len(pool.cache_meta) == 3
+    assert sorted(m["tokens"] for m in pool.cache_meta.values()) == [5, 6, 7]
+
+
+def test_meta_at_expires_ttl_at_serve_time(setup):
+    """Index eviction is lazy (insert-driven): an all-hit workload never
+    inserts, so nothing ever evicts — TTL expiry must be judged at serve
+    time or a stale answer serves forever."""
+    db, graph, _ = setup
+    cfg = VectorPoolConfig(num_vectors=1200, dim=32, graph_degree=16,
+                           max_requests=8, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=4,
+                           semantic_cache_enabled=True, cache_capacity=16,
+                           cache_ttl_s=5.0)
+    pool = VectorPool(cfg, db, graph, use_pallas=False, seed=0)
+    rng = np.random.default_rng(8)
+    row = pool.submit_insert(_vec(rng), meta={"tokens": 1}, t_now=0.0)
+    assert pool.meta_at(row, 4.9) == {"tokens": 1}  # fresh: serves
+    assert pool.meta_at(row, 1000.0) is None  # stale: never serves
+    # zero inserts happened in between — eviction alone would not have run
+    assert pool.metrics.cache_evictions == 0
+
+
+def test_growth_respects_replica_row_budget(setup):
+    """replica_max_rows is enforced at cache GROWTH too, not only at
+    construction — insert load cannot silently push a replica past its
+    modeled HBM."""
+    from repro.vector.online import CapacityError, OnlineIndex
+
+    db, graph, _ = setup  # 1200 frozen rows
+    idx = OnlineIndex(db, graph, cache_capacity=32, max_rows=1264)
+    rng = np.random.default_rng(9)
+    for i in range(64):  # fills the clamped 64-row cache allowance
+        idx.insert(_vec(rng), t_now=float(i))
+    assert idx.db.shape[0] <= 1264
+    rows_before, live_before = idx.cache_rows, idx.cache_size
+    with pytest.raises(CapacityError, match="re-shard"):
+        idx.insert(_vec(rng), t_now=65.0)
+    # the refused insert committed nothing: index still consistent
+    assert idx.cache_rows == rows_before <= idx.cache_capacity
+    assert idx.cache_size == live_before
+    # a bounded segment under the same budget keeps serving via reuse
+    idx2 = OnlineIndex(db, graph, cache_capacity=32, max_rows=1264,
+                       max_entries=50)
+    for i in range(200):
+        idx2.insert(_vec(rng), t_now=float(i))
+    assert idx2.cache_size == 50 and idx2.db.shape[0] <= 1264
+
+
+def test_meta_at_rejects_reused_slot(setup):
+    """Slot-reuse aliasing guard: a lookup that resolved row r BEFORE r
+    was evicted and re-filled must not serve the new occupant's answer —
+    ``meta_at`` rejects occupants born after the lookup completed."""
+    db, graph, _ = setup
+    cfg = VectorPoolConfig(num_vectors=1200, dim=32, graph_degree=16,
+                           max_requests=8, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=4,
+                           semantic_cache_enabled=True, cache_capacity=16,
+                           cache_max_entries=1)
+    pool = VectorPool(cfg, db, graph, use_pallas=False, seed=0)
+    rng = np.random.default_rng(7)
+    row = pool.submit_insert(_vec(rng), meta={"tokens": 1}, t_now=0.0)
+    # a lookup that completed at t=1.0 would legitimately serve row
+    assert pool.meta_at(row, 1.0) == {"tokens": 1}
+    # cap=1: the next insert evicts + reuses the slot (same row id)
+    row2 = pool.submit_insert(_vec(rng), meta={"tokens": 2}, t_now=2.0)
+    pool.run_until(3.0)
+    assert row2 is None and pool.cache_size == 1  # rode the scheduler
+    # the old lookup (completed at t=1.0) must now MISS, not serve 2
+    assert pool.meta_at(row, 1.0) is None
+    # a fresh lookup completing after the rebind serves the new answer
+    assert pool.meta_at(row, 3.0) == {"tokens": 2}

@@ -14,6 +14,41 @@ SETTINGS = dict(max_examples=25, deadline=None)
 
 
 # ---------------------------------------------------------------------------
+# scatter–gather merge (sharded serving): per-shard exact top-k merged ==
+# monolithic exact top-k
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(24, 240),
+    s=st.integers(1, 8),
+    k=st.integers(1, 12),
+    q=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sharded_exact_merge_equals_monolithic(n, s, k, q, seed):
+    """For ANY random corpus, shard count and k: balanced-k-means
+    partition + exhaustive per-shard top-k + partial-top-k merge is the
+    monolithic exact oracle. Continuous random floats make ties
+    probability-zero, so id equality (not just distance equality) must
+    hold; shards may be smaller than k (their lists pad with −1)."""
+    from repro.vector.ref import exact_knn
+    from repro.vector.shards import ShardedIndex
+
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    db = rng.normal(size=(n, 8)).astype(np.float32)
+    queries = rng.normal(size=(q, 8)).astype(np.float32)
+    si = ShardedIndex(db, num_shards=s, build_graphs=False,
+                      seed=seed % 1000)
+    ids, dists = si.exact_search(queries, k)
+    true_ids, true_d = exact_knn(db, queries, k)
+    np.testing.assert_array_equal(ids, true_ids)
+    np.testing.assert_allclose(dists, true_d, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # topM merge (the per-request candidate list of §3.2)
 # ---------------------------------------------------------------------------
 

@@ -110,6 +110,45 @@ def test_repeated_prompt_workload_mostly_hits(setup):
     assert sim.vector_pool.metrics.inserts == n - s["cache_hits"]
 
 
+def test_cache_hit_pays_answer_transfer_on_busy_link(setup):
+    """A hit is no longer free: the cached answer ships over the shared KV
+    link, so a hit landing behind an in-flight prefill KV transfer queues
+    for the link before its first token."""
+    db, graph = setup
+    sim = _sim(db, graph, _cfg())
+    first = GenRequest(0, prompt_len=256, max_new_tokens=8, t_arrival=0.0,
+                       rag_interval=0, prompt_id=42)
+    repeat = GenRequest(1, prompt_len=256, max_new_tokens=8, t_arrival=2.0,
+                        rag_interval=0, prompt_id=42)
+    sim.arrive(first)
+    sim.arrive(repeat)
+    # saturate the KV link for 50 ms right as the repeat's lookup lands
+    sim.schedule(2.0, lambda: sim.kv_link.transfer(
+        2.0, sim.kv_link.bandwidth * 0.05))
+    sim.run(8.0)
+    assert repeat.cache_hit
+    assert repeat.t_first_token >= 2.05  # queued behind the busy link
+    assert repeat.t_done == repeat.t_first_token
+
+
+def test_cache_hit_transfer_disabled_is_zero_time(setup):
+    """answer_bytes_per_token = 0 restores the legacy free-hit path (the
+    hit never touches the link)."""
+    db, graph = setup
+    sim = _sim(db, graph, _cfg(answer_bytes_per_token=0.0))
+    sim.arrive(GenRequest(0, prompt_len=256, max_new_tokens=8,
+                          t_arrival=0.0, rag_interval=0, prompt_id=42))
+    sim.arrive(GenRequest(1, prompt_len=256, max_new_tokens=8,
+                          t_arrival=2.0, rag_interval=0, prompt_id=42))
+    sim.run(8.0)
+    hit = [r for r in sim.metrics.finished if r.cache_hit]
+    assert len(hit) == 1
+    # the miss used the link (its prefill KV, done well before t=2.0); the
+    # hit at t≈2.0 must not have touched it — busy_until stayed at the
+    # miss's transfer end
+    assert sim.kv_link.busy_until < 2.0
+
+
 # ---------------------------------------------------------------------------
 # satellite regressions
 # ---------------------------------------------------------------------------

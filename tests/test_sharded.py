@@ -1,0 +1,341 @@
+"""Sharded vector index + scatter–gather serving (vector/shards.py,
+core/trinity_pool.ShardedVectorPool): partition/merge exactness, insert
+routing to the owning shard, shard re-assignment after kill_replica,
+capacity modeling, and the sharded cluster scenario."""
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import (CapacityError, ShardedVectorPool,
+                                     VectorPool)
+from repro.kernels.ops import merge_partial_topk
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+from repro.vector.ref import exact_knn, recall_at_k
+from repro.vector.shards import ShardedIndex, balanced_partition
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(3000, 32, num_clusters=16, num_queries=64,
+                               seed=1)
+    return db, queries
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=3000, dim=32, graph_degree=16, max_requests=16,
+                top_m=32, parents_per_step=2, task_batch=2048,
+                visited_slots=512, top_k=10, semantic_cache_enabled=True,
+                cache_capacity=64, num_shards=4)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# partition + merge exactness
+# ---------------------------------------------------------------------------
+
+
+def test_balanced_partition_covers_and_balances(setup):
+    db, _ = setup
+    for S in (1, 3, 4, 7):
+        _, parts = balanced_partition(db, S, seed=0)
+        sizes = [len(p) for p in parts]
+        assert sum(sizes) == len(db)
+        assert max(sizes) <= -(-len(db) // S)  # capacity cap ⌈N/S⌉
+        allrows = np.concatenate(parts)
+        assert len(np.unique(allrows)) == len(db)  # disjoint + complete
+
+
+def test_fanout_all_exact_matches_monolithic_oracle(setup):
+    """Acceptance criterion: fan-out-all sharded search under exhaustive
+    per-shard search returns top-k IDENTICAL to the monolithic exact
+    oracle."""
+    db, queries = setup
+    true_ids, true_d = exact_knn(db, queries, 10)
+    for S in (2, 4, 5):
+        si = ShardedIndex(db, num_shards=S, build_graphs=False, seed=0)
+        ids, dists = si.exact_search(queries, 10)
+        np.testing.assert_array_equal(ids, true_ids)
+        np.testing.assert_allclose(dists, true_d, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_merge_randomized_sweep():
+    """Seeded randomized corpora/shard-counts/k sweep of the merge
+    exactness property — the hypothesis twin in tests/test_properties.py
+    skips wherever hypothesis is not installed, so the acceptance-critical
+    property must also run under the plain suite."""
+    rng0 = np.random.default_rng(42)
+    for _ in range(15):
+        n = int(rng0.integers(24, 241))
+        s = int(rng0.integers(1, 9))
+        k = min(int(rng0.integers(1, 13)), n)
+        q = int(rng0.integers(1, 7))
+        seed = int(rng0.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        db = rng.normal(size=(n, 8)).astype(np.float32)
+        queries = rng.normal(size=(q, 8)).astype(np.float32)
+        si = ShardedIndex(db, num_shards=s, build_graphs=False,
+                          seed=seed % 1000)
+        ids, dists = si.exact_search(queries, k)
+        true_ids, true_d = exact_knn(db, queries, k)
+        np.testing.assert_array_equal(ids, true_ids)
+        np.testing.assert_allclose(dists, true_d, rtol=1e-5, atol=1e-6)
+
+
+def test_ttl_expiry_served_correctly_in_sharded_pool(setup):
+    """Sharded meta_at judges TTL at serve time (lazy index eviction
+    cannot be relied on for a shard that receives no new inserts)."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(cache_ttl_s=5.0), db, seed=0)
+    vec = db[7] + 0.01
+    gid = pool.submit_insert(vec, meta={"tokens": 9}, t_now=0.0)
+    assert pool.meta_at(gid, 4.9) == {"tokens": 9}
+    assert pool.meta_at(gid, 1000.0) is None
+
+
+def test_merge_partial_topk_padding_and_order():
+    ids = np.asarray([[[3, 7, -1], [5, -1, -1]]], np.int32)  # (1, 2, 3)
+    d = np.asarray([[[0.5, 2.0, 0.0], [1.0, 0.0, 0.0]]], np.float32)
+    out_ids, out_d = merge_partial_topk(ids, d, k=4)
+    np.testing.assert_array_equal(np.asarray(out_ids)[0], [3, 5, 7, -1])
+    assert np.asarray(out_d)[0, 3] >= 1e29  # padded tail
+    assert np.all(np.diff(np.asarray(out_d)[0]) >= 0)
+
+
+def test_routed_mode_recall_degrades_gracefully(setup):
+    db, queries = setup
+    si = ShardedIndex(db, num_shards=4, build_graphs=False, seed=0)
+    true_ids, _ = exact_knn(db, queries, 10)
+    prev = 0.0
+    for nprobe in (1, 2, 4):
+        ids, _ = si.exact_search(queries, 10,
+                                 shard_lists=si.route(queries, nprobe))
+        r = recall_at_k(ids, true_ids)
+        assert r >= prev - 1e-9  # monotone in nprobe
+        prev = r
+    assert prev == 1.0  # nprobe = S is exact
+
+
+# ---------------------------------------------------------------------------
+# the scatter–gather pool
+# ---------------------------------------------------------------------------
+
+
+def _probe_all(pool, queries, n, t0=0.0, gap=2e-4, kind="prefill"):
+    t = t0
+    for i in range(n):
+        pool.submit(VectorRequest(i, kind, queries[i], t, t + 0.025))
+        t += gap
+    pool.run_until(t + 1.0)
+    return t
+
+
+def test_capacity_error_monolithic_vs_sharded(setup):
+    """replica_max_rows models one replica's HBM: the monolithic pool
+    refuses a corpus past it, the sharded pool serves it."""
+    db, queries = setup
+    cfg = _cfg(replica_max_rows=1200)
+    graph = make_cagra_graph(db, 16, seed=1)
+    with pytest.raises(CapacityError, match="num_shards"):
+        VectorPool(cfg, db, graph)
+    pool = ShardedVectorPool(cfg, db, seed=0)
+    for sh in pool.shards.shards:
+        assert sh.db.shape[0] <= 1200  # every shard replica fits
+    _probe_all(pool, queries, 8)
+    assert len(pool.metrics.completed) == 8
+
+
+def test_pool_fanout_search_results(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    _probe_all(pool, queries, 32)
+    done = {r.rid: r for r in pool.metrics.completed}
+    assert len(done) == 32
+    assert pool.metrics.sub_searches == 32 * 4  # fan-out-all
+    assert pool.metrics.merges == 32
+    found = np.stack([done[i].result_ids for i in range(32)])
+    assert found.shape == (32, 10)
+    true_ids, _ = exact_knn(db, queries[:32], 10)
+    assert recall_at_k(found, true_ids) > 0.9
+    # merged results are globally sorted by distance
+    for i in range(32):
+        d = done[i].result_dists
+        assert np.all(np.diff(d) >= -1e-5)
+    # parents carry admission/latency accounting for the control loop
+    assert all(done[i].t_admitted is not None for i in range(32))
+
+
+def test_routed_pool_reduces_fanout(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(nprobe_shards=1), db, seed=0)
+    _probe_all(pool, queries, 16)
+    assert pool.metrics.sub_searches == 16  # one child per request
+    assert len(pool.metrics.completed) == 16
+
+
+def test_insert_routes_to_owning_shard_only(setup):
+    """Online inserts touch ONE shard: the owner gets the node and the
+    broadcast; every other shard's arrays are untouched."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    before = [sh.db for sh in pool.shards.shards]
+    vec = db[7] + 0.01  # firmly inside shard-of-row-7's centroid cell
+    own = pool.shards.owning_shard(vec)
+    t = 0.0
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        pool.submit_insert(vec + rng.normal(0, 0.01, 32).astype(np.float32),
+                           meta={"tokens": i}, t_now=t)
+        t += 5e-4
+        pool.run_until(t)
+    pool.run_until(t + 1.0)
+    assert pool.metrics.inserts == 12
+    assert pool.shards.shards[own].cache_size == 12
+    for s, sh in enumerate(pool.shards.shards):
+        if s != own:
+            assert sh.cache_size == 0
+            assert sh.db is before[s]  # buffer never even swapped
+    # broadcasts went to the owning shard's replicas only — never global
+    n_own = len(pool.shard_replicas(own))
+    assert pool.metrics.broadcasts == 12 * n_own
+    assert pool.metrics.broadcasts < 12 * len(pool.replicas)
+    # cache_replication guarantee: the cache shard has >= 2 replicas
+    assert n_own >= 2
+
+
+def test_cache_lookup_fans_to_cache_shards(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    vec = db[7] + 0.01
+    gid = pool.submit_insert(vec, meta={"tokens": 9}, t_now=0.0)
+    assert gid is not None and gid >= 3000  # global cache id space
+    pool.submit(VectorRequest(500, "cache_lookup", vec, 0.1, 0.2))
+    pool.run_until(2.0)
+    done = {r.rid: r for r in pool.metrics.completed}
+    assert 500 in done
+    ids = done[500].result_ids
+    assert int(ids[0]) == gid  # found the cached entry under its global id
+    assert pool.cache_meta[gid] == {"tokens": 9}
+
+
+def test_cache_lookup_with_empty_cache_is_immediate_miss(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    pool.submit(VectorRequest(1, "cache_lookup", queries[0], 0.0, 0.1))
+    pool.run_until(1.0)
+    done = pool.metrics.completed
+    assert len(done) == 1 and done[0].result_ids is None
+
+
+def test_kill_replica_reassigns_orphaned_shard(setup):
+    """Acceptance: kill_replica re-queues in-flight sub-searches and
+    re-homes a shard left with no replica; every logical request still
+    completes with full fan-out results."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t = 0.0
+    for i in range(24):
+        pool.submit(VectorRequest(i, "prefill", queries[i], t, t + 0.025))
+        t += 1e-4
+    # step a little so work is in flight, then fail-stop one replica
+    pool.run_until(8e-4)
+    assert any(r.in_flight for r in pool.replicas)
+    victim = max(range(len(pool.replicas)),
+                 key=lambda i: len(pool.replicas[i].in_flight))
+    s = pool.replicas[victim].shard
+    pool.kill_replica(victim)
+    assert pool.metrics.shard_reassignments == 1
+    assert len(pool.shard_replicas(s)) == 1  # re-homed immediately
+    pool.run_until(t + 1.0)
+    done = {r.rid for r in pool.metrics.completed}
+    assert done == set(range(24))  # nothing lost
+    found = {r.rid: r.result_ids for r in pool.metrics.completed}
+    true_ids, _ = exact_knn(db, queries[:24], 10)
+    got = np.stack([found[i] for i in range(24)])
+    assert recall_at_k(got, true_ids) > 0.9
+
+
+def test_checkpoints_are_shard_portable(setup):
+    """A child preempted on one replica of a shard resumes bit-identically
+    on ANOTHER replica of the same shard (same padded arrays)."""
+    db, queries = setup
+    cfg = _cfg()
+    pool = ShardedVectorPool(cfg, db, replicas_per_shard=2, seed=0)
+    reps = pool.shard_replicas(0)
+    assert len(reps) == 2
+    a, b = reps[0].engine, reps[1].engine
+    # reference: uninterrupted run on a (results are a pure function of
+    # (qvec, rid, engine seed), so re-admitting rid 77 on a reproduces it)
+    a.admit(77, queries[0])
+    ref = a.run_to_completion()
+    # preempt mid-flight on a, migrate the checkpoint to b
+    a.admit(77, queries[0])
+    a.step_multi(2)
+    ckpts = a.preempt([77])
+    b.resume_batch(ckpts)
+    out = b.run_to_completion()
+    np.testing.assert_array_equal(out[0][1], ref[0][1])
+    assert out[0][3] == ref[0][3]  # same total extends
+
+
+def test_sole_shard_replica_never_quarantined(setup):
+    """A slowed-down sole replica of a shard keeps serving: quarantining
+    it would starve that shard's private queue and hang every fan-out
+    parent forever (monolithic pools are immune — any replica drains the
+    shared queue)."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, replicas_per_shard=1, seed=0)
+    pool.set_slowdown(0, 10.0)  # way past straggler_factor × median
+    t = _probe_all(pool, queries, 16, gap=1e-3)
+    done = {r.rid for r in pool.metrics.completed}
+    assert done == set(range(16))  # shard 0's children all completed
+    # a second replica on the same shard re-enables normal quarantine
+    pool2 = ShardedVectorPool(_cfg(), db, replicas_per_shard=2, seed=0)
+    pool2.set_slowdown(0, 10.0)
+    _probe_all(pool2, queries, 16, gap=1e-3)
+    assert {r.rid for r in pool2.metrics.completed} == set(range(16))
+
+
+def test_registered_class_reaches_all_shards(setup):
+    """scheduler.register() on the primary scheduler must be visible to
+    every shard's resolve() — children of a custom class ride all
+    shards."""
+    from repro.core.scheduler import RetrievalClass
+
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    pool.scheduler.register(RetrievalClass("bulk_analytics", "fifo", 500.0))
+    pool.submit(VectorRequest(0, "bulk_analytics", queries[0], 0.0, 0.5))
+    pool.run_until(1.0)
+    done = pool.metrics.completed
+    assert len(done) == 1 and done[0].kind == "bulk_analytics"
+    assert done[0].result_ids is not None
+
+
+def test_sharded_cluster_scenario(setup):
+    """Cluster-level acceptance: a corpus past one replica's capacity
+    serves in the sim with per-shard inserts and zero global
+    broadcasts."""
+    from repro.serving.cluster import make_sharded_pool_sim
+    from repro.serving.request import GenRequest
+
+    sim, db, queries = make_sharded_pool_sim(num_vectors=4000,
+                                             replica_max_rows=1800,
+                                             num_shards=4)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(24):
+        t += float(rng.exponential(0.05))
+        sim.arrive(GenRequest(i, prompt_len=128, max_new_tokens=6,
+                              t_arrival=t, rag_interval=0,
+                              prompt_id=int(rng.integers(0, 4))))
+    sim.run(t + 8.0)
+    s = sim.metrics.summary(t + 8.0)
+    pm = sim.vector_pool.metrics
+    assert s["requests"] == 24
+    assert s["cache_hits"] > 0 and pm.inserts > 0
+    assert sim.vector_pool.cache_size == pm.inserts
+    # every broadcast touched only the owning shard's replicas
+    assert pm.broadcasts < pm.inserts * len(sim.vector_pool.replicas)
