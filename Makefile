@@ -6,7 +6,8 @@
 PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
-	bench-cache bench-sharded trace-check
+	bench-cache bench-sharded bench-rebalance trace-check docs docs-check \
+	linkcheck
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -32,5 +33,21 @@ bench-cache:
 bench-sharded:
 	PYTHONPATH=src python -m benchmarks.bench_sharded
 
+bench-rebalance:
+	PYTHONPATH=src python -m benchmarks.bench_rebalance
+
 trace-check:
 	PYTHONPATH=src:tests python -m scheduler_trace_driver --check
+
+# regenerate the introspected knob reference (docs/configuration.md)
+docs:
+	PYTHONPATH=src python tools/gen_config_docs.py
+
+# CI freshness gate: fails when the committed docs/configuration.md does
+# not match what the dataclasses in configs/base.py would generate
+docs-check:
+	PYTHONPATH=src python tools/gen_config_docs.py --check
+
+# offline markdown link check over docs/ + README.md
+linkcheck:
+	PYTHONPATH=src python tools/check_links.py README.md docs

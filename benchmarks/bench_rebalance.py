@@ -1,0 +1,293 @@
+"""Workload-adaptive shard rebalancing benchmark: skewed probes vs the
+static PR-4 partition, and skewed inserts vs the per-shard entry cap.
+
+Sections (all recorded in ``BENCH_rebalance.json``):
+
+  A — skewed probes (replica reassignment): a Poisson probe stream with
+      80 % of queries routed (``nprobe_shards=1``) to ONE shard. Three
+      arms over the same stream: ``static`` (``rebalance_enabled=False``
+      — the exact PR-4 path), ``static_seeded`` (rebalancing machinery on
+      but thresholds inert — same per-shard engine seeds as the adaptive
+      arm, the seed-matched baseline the recall-delta claim compares
+      against) and ``rebalance``. Acceptance: the adaptive arm improves
+      the hot shard's p95 admission wait vs BOTH static arms, moves
+      replicas (``rebalances > 0``), and returns results bit-identical to
+      ``static_seeded`` per rid (``result_mismatches == 0`` — RAG recall
+      delta exactly 0 by construction: with the knob on, replicas of a
+      shard share one engine seed, so a child's results are a pure
+      function of (rid, qvec, shard)).
+
+  B — skewed inserts (cache-entry migration): every insert targets one
+      shard whose live-entry budget (``cache_max_entries``) is below the
+      insert count. Static arm: the cap evicts the oldest answers →
+      repeat lookups MISS. Adaptive arm: the pool migrates the oldest
+      entries to the least-occupied shard before the cap bites
+      (``migrated_entries > 0``, ``cache_evictions == 0``) → every repeat
+      lookup still HITS under its original global cache id. Acceptance:
+      adaptive miss rate < static miss rate.
+
+The cooldown is scaled to the bench's millisecond-scale burst
+(``rebalance_cooldown_s=1e-3``); production traffic would pace in the
+0.1–1 s range (see docs/configuration.md).
+
+``PYTHONPATH=src python -m benchmarks.bench_rebalance``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, poisson_arrivals
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import ShardedVectorPool
+from repro.vector.dataset import make_dataset
+from repro.vector.ref import exact_knn, recall_at_k
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "BENCH_rebalance.json")
+
+N_VECTORS = 6000
+DIM = 64
+SHARDS = 4
+N_PROBES = 600
+PROBE_RATE_QPS = 200_000.0  # ~3.2× one 2-replica shard's throughput
+HOT_FRACTION = 0.8  # 8 of every 10 probes target the hot shard
+N_INSERTS = 40
+ENTRY_CAP = 24  # per-shard live-entry budget (< N_INSERTS: cap must bite)
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=N_VECTORS, dim=DIM, graph_degree=16,
+                max_requests=8, top_m=32, parents_per_step=2,
+                task_batch=2048, visited_slots=512, top_k=10,
+                semantic_cache_enabled=True, cache_capacity=64,
+                num_shards=SHARDS)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+ARMS = {
+    # the exact PR-4 code path (per-replica engine seeds, no rebalancing)
+    "static": dict(rebalance_enabled=False),
+    # seed-matched baseline: machinery on, thresholds inert — no action
+    # can ever trigger, but engine seeds match the adaptive arm so the
+    # recall-delta comparison is bit-exact
+    "static_seeded": dict(rebalance_enabled=True,
+                          rebalance_hot_factor=1e18,
+                          rebalance_migrate_watermark=1e18),
+    "rebalance": dict(rebalance_enabled=True,
+                      rebalance_cooldown_s=1e-3),
+}
+
+
+def _skew_plan(pool, queries):
+    """(hot shard id, per-probe query index): HOT_FRACTION of probes pick
+    queries routed to the most popular shard, the rest cycle the others."""
+    routes = pool.shards.route(queries, 1)[:, 0]
+    hot = int(np.bincount(routes, minlength=SHARDS).argmax())
+    hot_q = [i for i in range(len(queries)) if routes[i] == hot]
+    cold_q = [i for i in range(len(queries)) if routes[i] != hot]
+    period = 10
+    n_hot = int(round(HOT_FRACTION * period))
+    plan = []
+    for i in range(N_PROBES):
+        if i % period < n_hot:
+            plan.append(hot_q[i % len(hot_q)])
+        else:
+            plan.append(cold_q[i % len(cold_q)])
+    return hot, np.asarray(plan)
+
+
+def _run_probe_arm(pool, queries, plan, routes):
+    arrivals = poisson_arrivals(PROBE_RATE_QPS, N_PROBES, seed=3)
+    for i, t in enumerate(arrivals):
+        pool.submit(VectorRequest(i, "prefill", queries[plan[i]], float(t),
+                                  float(t) + pool.cfg.prefill_deadline_ms
+                                  / 1e3))
+    pool.run_until(float(arrivals[-1]) + 2.0)
+    done = {r.rid: r for r in pool.metrics.completed}
+    assert len(done) == N_PROBES
+    waits = np.asarray([done[i].wait for i in range(N_PROBES)])
+    lats = np.asarray([done[i].t_completed - done[i].t_arrival
+                       for i in range(N_PROBES)])
+    found = np.stack([done[i].result_ids for i in range(N_PROBES)])
+    return waits, lats, found
+
+
+def _probe_section():
+    db, queries = make_dataset(N_VECTORS, DIM, num_clusters=32,
+                               num_queries=256, seed=11)
+    ref_pool = ShardedVectorPool(_cfg(nprobe_shards=1), db,
+                                 replicas_per_shard=2, seed=0)
+    hot, plan = _skew_plan(ref_pool, queries)
+    routes = ref_pool.shards.route(queries, 1)[:, 0]
+    hot_mask = routes[plan] == hot
+    true_ids, _ = exact_knn(db, queries[plan], 10)
+
+    arms, founds = {}, {}
+    for name, kw in ARMS.items():
+        pool = ShardedVectorPool(_cfg(nprobe_shards=1, **kw), db,
+                                 replicas_per_shard=2, seed=0)
+        waits, lats, found = _run_probe_arm(pool, queries, plan, routes)
+        founds[name] = found
+        arms[name] = {
+            "hot_shard_p95_wait_ms":
+                float(np.percentile(waits[hot_mask], 95) * 1e3),
+            "hot_shard_p50_wait_ms":
+                float(np.percentile(waits[hot_mask], 50) * 1e3),
+            "latency_p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "latency_p95_ms": float(np.percentile(lats, 95) * 1e3),
+            "recall_at_10": recall_at_k(found, true_ids),
+            "rebalances": pool.metrics.rebalances,
+            "preemptions": pool.metrics.preemptions,
+            "replicas_per_shard_end":
+                [len(pool.shard_replicas(s)) for s in range(SHARDS)],
+            "pool_shard_p95_wait_ms":
+                {s: pool.metrics.shard_p95_wait(s) * 1e3
+                 for s in range(SHARDS)},
+        }
+
+    # recall delta EXACTLY 0 vs the seed-matched baseline, id-for-id
+    mism = int(np.sum(np.any(founds["rebalance"] != founds["static_seeded"],
+                             axis=1)))
+    recall_delta = (arms["rebalance"]["recall_at_10"]
+                    - arms["static_seeded"]["recall_at_10"])
+    assert mism == 0, mism
+    assert recall_delta == 0.0, recall_delta
+    assert arms["rebalance"]["rebalances"] > 0
+    assert arms["static"]["rebalances"] == 0
+    for base in ("static", "static_seeded"):
+        assert (arms["rebalance"]["hot_shard_p95_wait_ms"]
+                < arms[base]["hot_shard_p95_wait_ms"]), (base, arms)
+    return {"hot_shard": hot, "arms": arms,
+            "result_mismatches_vs_static_seeded": mism,
+            "recall_delta_vs_static_seeded": recall_delta,
+            "hot_p95_wait_improvement_vs_static":
+                arms["static"]["hot_shard_p95_wait_ms"]
+                / max(arms["rebalance"]["hot_shard_p95_wait_ms"], 1e-12)}
+
+
+def _skewed_prompts(pool, db):
+    """N_INSERTS DISTINCT prompt embeddings, all owned by one shard:
+    spread corpus rows of the most popular shard's territory (pairwise
+    distance ≫ the hit threshold, so each prompt only ever hits its OWN
+    cached answer — an evicted answer is a real miss)."""
+    own = pool.shards.route(db, 1)[:, 0]
+    hot = int(np.bincount(own, minlength=SHARDS).argmax())
+    rows = np.flatnonzero(own == hot)
+    sel = rows[:: max(1, len(rows) // N_INSERTS)][:N_INSERTS]
+    vecs = [db[r].astype(np.float32) for r in sel]
+    assert all(pool.shards.owning_shard(v) == hot for v in vecs)
+    return vecs
+
+
+def _run_insert_arm(pool, vecs):
+    """Skewed-insert workload + repeat lookups; returns the miss rate."""
+    t = 0.0
+    for i, v in enumerate(vecs):
+        pool.submit_insert(v, meta={"tokens": i}, t_now=t)
+        t += 2e-3
+        pool.run_until(t)
+    pool.run_until(t + 1.0)
+    # repeat lookups: every inserted prompt probed with its exact vector
+    thr = pool.scheduler.classes["cache_lookup"].score_threshold
+    base_rid = 1 << 20
+    for i, v in enumerate(vecs):
+        pool.submit(VectorRequest(base_rid + i, "cache_lookup", v, t + 0.01,
+                                  t + 0.11))
+    pool.run_until(t + 2.0)
+    done = {r.rid: r for r in pool.metrics.completed}
+    misses = 0
+    for i in range(N_INSERTS):
+        vreq = done[base_rid + i]
+        hit = False
+        if vreq.result_ids is not None:
+            for row, dist in zip(vreq.result_ids, vreq.result_dists):
+                if float(dist) <= thr and \
+                        pool.meta_at(int(row), vreq.t_completed) is not None:
+                    hit = True
+                    break
+        misses += not hit
+    return misses / N_INSERTS
+
+
+def _insert_section():
+    db, _ = make_dataset(N_VECTORS, DIM, num_clusters=32, num_queries=8,
+                         seed=11)
+    out = {}
+    vecs = None
+    for name, kw in ARMS.items():
+        if name == "static_seeded":
+            continue  # seed-matching is a probe-arm concern
+        pool = ShardedVectorPool(
+            _cfg(cache_capacity=16, cache_max_entries=ENTRY_CAP,
+                 rebalance_migrate_watermark=0.6, rebalance_migrate_batch=8,
+                 **kw), db, replicas_per_shard=2, seed=0)
+        if vecs is None:
+            vecs = _skewed_prompts(pool, db)
+        miss_rate = _run_insert_arm(pool, vecs)
+        out[name] = {
+            "miss_rate": miss_rate,
+            "inserts": pool.metrics.inserts,
+            "migrated_entries": pool.metrics.migrated_entries,
+            "cache_evictions": pool.metrics.cache_evictions,
+            "live_entries": pool.cache_size,
+            "cache_entries_per_shard":
+                [sh.cache_size for sh in pool.shards.shards],
+        }
+    assert out["rebalance"]["migrated_entries"] > 0
+    assert out["static"]["migrated_entries"] == 0
+    assert out["rebalance"]["miss_rate"] < out["static"]["miss_rate"], out
+    return out
+
+
+def run(emit_rows: bool = True, out_path: str = DEFAULT_OUT):
+    probes = _probe_section()
+    inserts = _insert_section()
+    report = {
+        "scenario": {
+            "num_vectors": N_VECTORS, "dim": DIM, "num_shards": SHARDS,
+            "probes": N_PROBES, "probe_rate_qps": PROBE_RATE_QPS,
+            "hot_fraction": HOT_FRACTION, "inserts": N_INSERTS,
+            "cache_max_entries": ENTRY_CAP,
+        },
+        "skewed_probes": probes,
+        "skewed_inserts": inserts,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    rows = []
+    for arm, st in probes["arms"].items():
+        for metric in ("hot_shard_p95_wait_ms", "latency_p95_ms",
+                       "recall_at_10", "rebalances"):
+            rows.append((f"probes_{arm}", metric,
+                         round(float(st[metric]), 4)))
+    for arm, st in inserts.items():
+        for metric in ("miss_rate", "migrated_entries", "cache_evictions"):
+            rows.append((f"inserts_{arm}", metric,
+                         round(float(st[metric]), 4)))
+    rows.append(("probes", "result_mismatches",
+                 probes["result_mismatches_vs_static_seeded"]))
+    if emit_rows:
+        emit(rows, ("arm", "metric", "value"))
+    return {
+        "hot_p95_wait_improvement":
+            round(probes["hot_p95_wait_improvement_vs_static"], 3),
+        "recall_delta": probes["recall_delta_vs_static_seeded"],
+        "result_mismatches": probes["result_mismatches_vs_static_seeded"],
+        "static_miss_rate": inserts["static"]["miss_rate"],
+        "rebalance_miss_rate": inserts["rebalance"]["miss_rate"],
+        "json": out_path,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    print(run(out_path=args.out))

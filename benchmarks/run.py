@@ -12,9 +12,9 @@ import time
 
 from benchmarks import (bench_architectures, bench_continuous_batching,
                         bench_engine_dispatch, bench_preemption,
-                        bench_recall_latency, bench_roofline_stages,
-                        bench_scheduler, bench_semantic_cache,
-                        bench_sharded)
+                        bench_rebalance, bench_recall_latency,
+                        bench_roofline_stages, bench_scheduler,
+                        bench_semantic_cache, bench_sharded)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -26,6 +26,7 @@ BENCHES = {
     "supp_preemption": bench_preemption.run,
     "supp_semantic_cache": bench_semantic_cache.run,
     "supp_sharded": bench_sharded.run,
+    "supp_rebalance": bench_rebalance.run,
 }
 
 

@@ -219,6 +219,29 @@ class VectorPoolConfig:
     # (frozen + cache segments) exceeds this refuses to build — the signal
     # that a corpus must be sharded. 0 = unlimited
     replica_max_rows: int = 0
+    # workload-adaptive shard rebalancing: with the knob on, the sharded
+    # pool tracks per-shard load (EWMA probe/insert rates, queue depth,
+    # recent child wait p95) and, between fused chunks, (a) moves a
+    # replica from the coldest to the hottest shard when the imbalance
+    # clears the hysteresis band — in-flight work re-queues
+    # checkpoint-intact on the donor shard — and (b) migrates the oldest
+    # cache entries off a shard nearing its entry/row budget to the
+    # least-occupied neighbor (global cache ids stay stable across the
+    # move). Off (default) = the PR-4 static partition, bit-identical
+    rebalance_enabled: bool = False
+    rebalance_cooldown_s: float = 0.25  # min time between rebalance actions
+    # hysteresis band: a shard is hot when its per-replica load exceeds
+    # hot_factor × the pool mean AND some donor sits below cold_factor ×
+    # the mean — both must hold, so oscillating load cannot thrash
+    rebalance_hot_factor: float = 2.0
+    rebalance_cold_factor: float = 0.75
+    rebalance_window_s: float = 0.1  # EWMA horizon for per-shard load rates
+    # cache-entry migration: a shard whose live cache occupancy exceeds
+    # this fraction of its budget (cache_max_entries and/or the row budget
+    # left under replica_max_rows) sheds its oldest entries BEFORE the cap
+    # forces a real eviction
+    rebalance_migrate_watermark: float = 0.85
+    rebalance_migrate_batch: int = 8  # cache entries moved per migration
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

@@ -316,6 +316,11 @@ class LaneScheduler:
         self.classes[rclass.name] = rclass
 
     def resolve(self, req: VectorRequest) -> RetrievalClass:
+        """Stamp (and return) the request's :class:`RetrievalClass`,
+        looked up by ``req.kind`` when not already attached. Raises
+        ``KeyError`` naming the registered classes for an unknown kind.
+        Idempotent: an already-resolved request keeps its class even if
+        the registry entry was later replaced."""
         if req.rclass is None:
             try:
                 req.rclass = self.classes[req.kind]
@@ -326,6 +331,10 @@ class LaneScheduler:
         return req.rclass
 
     def submit(self, r: VectorRequest):
+        """Queue a request on its class's lane. Background-class work
+        always lands on the background queue (it must stay strictly
+        behind foreground under EVERY policy, including the
+        ``fifo_shared`` baseline's single shared queue)."""
         rclass = self.resolve(r)
         if rclass.lane == "background":
             # background work never rides the shared baseline queue: it
@@ -344,13 +353,25 @@ class LaneScheduler:
         return len(self.q_edf) + len(self.q_fifo) + len(self._shared_fifo)
 
     def queued_background(self) -> int:
+        """Depth of the background (deadline-less insert) lane."""
         return len(self.q_bg)
 
     def observe_extend_latency(self, t: float):
+        """Fold one measured extend latency into the T_ext EWMA that
+        every slack computation uses (the pool reports it per chunk)."""
         self.t_ext_ewma = 0.9 * self.t_ext_ewma + 0.1 * t
 
     # -- batch builder (paper Fig. 4) ---------------------------------------
     def select(self, n_slots: int, t_now: float) -> List[VectorRequest]:
+        """Build one admission batch for ``n_slots`` free engine slots.
+
+        Trinity policy: reserve ⌈r·n⌉ slots for the EDF lane
+        (slack-ordered), donate the unused share to FIFO, backfill EDF,
+        then let the background lane fill whatever every foreground lane
+        left free. Dequeued requests are stamped ``t_admitted = t_now``
+        (and their preemption wait closed). Invariant: never returns more
+        than ``n_slots`` requests; background work is only ever admitted
+        into slots no foreground lane wanted this flush."""
         if n_slots <= 0:
             return []
         if self.policy == "fifo_shared":

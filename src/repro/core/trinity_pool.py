@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Dict, List, Optional, Set
 
 import numpy as np
@@ -99,6 +100,18 @@ class PoolMetrics:
     sub_searches: int = 0  # per-shard children dispatched
     merges: int = 0  # parent fan-outs merged to completion
     shard_reassignments: int = 0  # orphaned shards re-homed after a kill
+    # workload-adaptive rebalancing
+    rebalances: int = 0  # replicas moved cold shard → hot shard
+    migrated_entries: int = 0  # cache entries re-homed between shards
+    # recent per-shard child admission waits (bounded window, newest last)
+    shard_waits: Dict[int, List[float]] = dataclasses.field(
+        default_factory=dict)
+
+    def shard_p95_wait(self, s: int) -> float:
+        """p95 of shard ``s``'s recent child admission waits (the
+        rebalancer's slew signal; 0.0 with no completed children)."""
+        xs = self.shard_waits.get(s)
+        return float(np.percentile(xs, 95)) if xs else 0.0
 
     def latencies(self, kind: Optional[str] = None) -> np.ndarray:
         xs = [r.t_completed - r.t_arrival for r in self.completed
@@ -112,6 +125,38 @@ class PoolMetrics:
     @property
     def occupancy(self) -> float:
         return self.tasks_emitted / max(self.tasks_capacity, 1)
+
+
+@dataclasses.dataclass
+class ShardLoad:
+    """Decayed per-shard demand counters (probe children dispatched,
+    cache inserts routed) over the ``rebalance_window_s`` horizon —
+    the arrival-rate half of the rebalancer's load signal (queue depth
+    and in-flight counts are read live)."""
+
+    probe_ewma: float = 0.0  # decayed child-dispatch count
+    insert_ewma: float = 0.0  # decayed cache-insert count
+    t_last: float = 0.0
+
+    def _decay(self, t: float, window: float) -> float:
+        return math.exp(-max(t - self.t_last, 0.0) / max(window, 1e-9))
+
+    def observe(self, t: float, window: float, probes: int = 0,
+                inserts: int = 0):
+        d = self._decay(t, window)
+        self.probe_ewma = self.probe_ewma * d + probes
+        self.insert_ewma = self.insert_ewma * d + inserts
+        self.t_last = max(self.t_last, t)
+
+    def decayed(self, t: float, window: float) -> float:
+        """Demand events still 'alive' in the window at time ``t``."""
+        return (self.probe_ewma + self.insert_ewma) * self._decay(t, window)
+
+    def probe_qps(self, t: float, window: float) -> float:
+        return self.probe_ewma * self._decay(t, window) / max(window, 1e-9)
+
+    def insert_qps(self, t: float, window: float) -> float:
+        return self.insert_ewma * self._decay(t, window) / max(window, 1e-9)
 
 
 class _Replica:
@@ -223,6 +268,7 @@ class VectorPool:
 
     @property
     def cache_size(self) -> int:
+        """Live answer-cache entries (tombstoned/evicted slots excluded)."""
         return self.index.cache_size
 
     def submit_insert(self, vec, meta=None, t_now: float = 0.0):
@@ -326,6 +372,8 @@ class VectorPool:
             sched.submit(req)
 
     def add_replica(self):
+        """Elastic scale-up: a fresh replica over the shared index joins
+        at the clock frontier (no simulated time travel)."""
         self.replicas.append(_Replica(self._next_rid, self.cfg, self.index,
                                       self._use_pallas,
                                       self._seed + self._next_rid))
@@ -333,6 +381,8 @@ class VectorPool:
         self._next_rid += 1
 
     def set_slowdown(self, idx: int, factor: float):
+        """Model straggling hardware: replica ``idx``'s extends take
+        ``factor``× the roofline time from now on."""
         self.replicas[idx].slowdown = factor
 
     # -------------------------------------------------------------- internals
@@ -357,6 +407,12 @@ class VectorPool:
             self.metrics.resumes += len(resumed)
         for req in batch:
             rep.in_flight[req.rid] = req
+
+    def _maybe_rebalance(self, rep: _Replica, t: float):
+        """Workload-adaptive rebalancing hook, invoked between fused
+        chunks like preemption. No-op for monolithic pools (one shared
+        queue — every replica already drains the hottest work); the
+        sharded pool overrides it."""
 
     def _maybe_preempt(self, rep: _Replica, t: float):
         """Between fused chunks: full engine + urgent queued work => evict
@@ -396,6 +452,7 @@ class VectorPool:
 
         healthy = self._healthy(rep)
         if healthy:
+            self._maybe_rebalance(rep, t)
             self._maybe_preempt(rep, t)
         free = rep.engine.num_free
         if healthy and \
@@ -460,6 +517,35 @@ class ShardedVectorPool(VectorPool):
     child has merged through the jitted partial-top-k. Inserts route to
     the owning (nearest-centroid) shard only and broadcast grown arrays to
     that shard's replicas alone — no global broadcast, ever.
+
+    Workload-adaptive rebalancing (``cfg.rebalance_enabled``): the static
+    balanced-k-means partition fixes shard CONTENT at build time, but
+    skewed traffic can still saturate one shard's replicas while others
+    idle. The pool tracks per-shard load (decayed probe/insert rates,
+    queue depth, in-flight counts, recent child wait p95 — see
+    :class:`ShardLoad` / ``PoolMetrics.shard_p95_wait``) and, between
+    fused chunks (``_maybe_rebalance``, the same cadence as preemption):
+
+      · **replica reassignment** — when one shard's per-replica load
+        clears ``rebalance_hot_factor``× the mean AND a donor sits below
+        ``rebalance_cold_factor``× (two-sided hysteresis), one cold
+        replica is re-homed onto the hot shard. The donor's in-flight
+        children are checkpointed and re-queued CHECKPOINT-INTACT on the
+        donor shard's scheduler (checkpoints are shard-portable, so the
+        remaining replicas resume them bit-identically). With the knob on,
+        all replicas of a shard share ONE engine seed, making a child's
+        results a pure function of (rid, qvec, shard) — reassignment is
+        result-neutral by construction (recall delta exactly 0).
+      · **cache-entry migration** — a shard whose live cache occupancy
+        crosses ``rebalance_migrate_watermark`` of its entry/row budget
+        sheds its oldest entries to the least-occupied shard
+        (``ShardedIndex.migrate_entries``) BEFORE the cap forces a real
+        eviction. Global cache ids and insert timestamps survive the move,
+        so ``cache_meta`` and the serve-time staleness guards are
+        untouched.
+
+    Both actions are paced by ``rebalance_cooldown_s``; with the knob off
+    (default) every path is bit-identical to the static PR-4 pool.
     """
 
     MAX_SHARDS = 64  # child rid encoding: (parent_rid << 6) | shard
@@ -517,10 +603,21 @@ class ShardedVectorPool(VectorPool):
                 self._add_shard_replica(s)
         self._fanout: Dict[int, _Fanout] = {}  # parent rid → fan-out state
         self._insert_shard: Dict[int, int] = {}  # insert rid → owning shard
+        # workload-adaptive rebalancing state
+        self._shard_load = [ShardLoad() for _ in range(S)]
+        self._last_move = -math.inf  # last replica reassignment
+        self._last_migrate = -math.inf  # last cache-entry migration
 
     def _add_shard_replica(self, s: int) -> _Replica:
+        # with rebalancing ON, every replica of a shard shares one engine
+        # seed: a child's results become a pure function of (rid, qvec,
+        # shard), so replica reassignment (and kill re-homing) is
+        # result-neutral by construction. With the knob OFF, seeds are
+        # exactly the static pool's (bit-identical legacy path)
+        eng_seed = self._seed + (s if self.cfg.rebalance_enabled
+                                 else self._next_rid)
         rep = _Replica(self._next_rid, self.cfg, self.shards.shards[s],
-                       self._use_pallas, self._seed + self._next_rid)
+                       self._use_pallas, eng_seed)
         rep.shard = s
         rep.clock = max((r.clock for r in self.replicas), default=0.0)
         self._next_rid += 1
@@ -530,6 +627,9 @@ class ShardedVectorPool(VectorPool):
         return rep
 
     def shard_replicas(self, s: int) -> List[_Replica]:
+        """The replicas currently serving shard ``s`` (≥ 1 always —
+        ``kill_replica`` re-homes an orphaned shard immediately, and the
+        rebalancer never drains a donor below its floor)."""
         return [r for r in self.replicas if r.shard == s]
 
     # ------------------------------------------------------ routing hooks
@@ -565,7 +665,10 @@ class ShardedVectorPool(VectorPool):
             targets = [int(s) for s in self.shards.route(parent.qvec,
                                                          nprobe)[0]]
         self._fanout[parent.rid] = _Fanout(parent, set(targets))
+        w = self.cfg.rebalance_window_s
         for s in targets:
+            if parent.kind != "insert":  # inserts observed at submit
+                self._shard_load[s].observe(parent.t_arrival, w, probes=1)
             self.schedulers[s].submit(VectorRequest(
                 self._child_rid(parent.rid, s), parent.kind, parent.qvec,
                 parent.t_arrival, parent.deadline,
@@ -602,8 +705,16 @@ class ShardedVectorPool(VectorPool):
             self._add_shard_replica(s)
 
     def submit_insert(self, vec, meta=None, t_now: float = 0.0):
+        """Insert ``vec`` into the owning (nearest-centroid) shard's cache
+        segment. Empty owning segment => synchronous placement (returns
+        the new global cache id); otherwise the insert rides that shard's
+        scheduler as a background-class request and returns None
+        (``cache_meta`` maps gid → ``meta`` once filled). Either way the
+        broadcast touches ONLY the owning shard's replicas."""
         vec = np.asarray(vec, np.float32)
         s = self.shards.owning_shard(vec)
+        self._shard_load[s].observe(t_now, self.cfg.rebalance_window_s,
+                                    inserts=1)
         self._ensure_cache_replication(s)
         if self.shards.shards[s].cache_size == 0:
             # empty owning-shard segment: nothing to search — place now
@@ -622,6 +733,9 @@ class ShardedVectorPool(VectorPool):
         in."""
         self.metrics.preempt_time += req.resume_wait
         s = req.shard
+        waits = self.metrics.shard_waits.setdefault(s, [])
+        waits.append(req.wait)
+        del waits[:-256]  # bounded window: recent waits only
         fan = self._fanout.pop(req.parent_rid, None)
         assert fan is not None, f"orphan child completion rid={req.rid}"
         parent = fan.parent
@@ -708,3 +822,166 @@ class ShardedVectorPool(VectorPool):
     def add_replica(self):  # pragma: no cover - guarded by elastic=False
         raise NotImplementedError(
             "sharded pools add replicas per shard (_add_shard_replica)")
+
+    # ------------------------------------------- workload-adaptive rebalance
+    def shard_load_score(self, s: int, t: float) -> float:
+        """Per-replica demand pressure on shard ``s`` at time ``t``:
+        (queued foreground + queued background + in-flight + decayed
+        recent arrivals) / replica count. The rebalancer compares these
+        across shards; they are also surfaced by
+        :meth:`shard_load_summary` for operators."""
+        sched = self.schedulers[s]
+        reps = self.shard_replicas(s)
+        inflight = sum(len(r.in_flight) for r in reps)
+        demand = (sched.queued() + sched.queued_background() + inflight
+                  + self._shard_load[s].decayed(
+                      t, self.cfg.rebalance_window_s))
+        return demand / max(len(reps), 1)
+
+    def shard_load_summary(self, t: float) -> List[dict]:
+        """One observability row per shard: replicas, queue depth,
+        in-flight, decayed probe/insert QPS, live cache entries, recent
+        child wait p95."""
+        w = self.cfg.rebalance_window_s
+        out = []
+        for s in range(self.shards.num_shards):
+            reps = self.shard_replicas(s)
+            ld = self._shard_load[s]
+            out.append({
+                "shard": s,
+                "replicas": len(reps),
+                "queued": self.schedulers[s].queued(),
+                "queued_background": self.schedulers[s].queued_background(),
+                "in_flight": sum(len(r.in_flight) for r in reps),
+                "probe_qps": ld.probe_qps(t, w),
+                "insert_qps": ld.insert_qps(t, w),
+                "cache_entries": self.shards.shards[s].cache_size,
+                "p95_wait": self.metrics.shard_p95_wait(s),
+                "load_score": self.shard_load_score(s, t),
+            })
+        return out
+
+    def _maybe_rebalance(self, rep: _Replica, t: float):
+        """Between fused chunks: migrate cache entries off
+        capacity-pressed shards, then move one replica cold → hot when
+        the load imbalance clears the hysteresis band. ``rep`` is the
+        currently-stepping replica — never chosen as the donor (its
+        engine state is live in the caller). Cooldown-paced; no-op with
+        the knob off or S = 1 (bit-identical static path)."""
+        cfg = self.cfg
+        if not cfg.rebalance_enabled or self.shards.num_shards < 2:
+            return
+        if t - self._last_migrate >= cfg.rebalance_cooldown_s:
+            if self._maybe_migrate(t):
+                self._last_migrate = t
+        if t - self._last_move < cfg.rebalance_cooldown_s:
+            return
+        S = self.shards.num_shards
+        scores = [self.shard_load_score(s, t) for s in range(S)]
+        mean = sum(scores) / S
+        if mean <= 1e-12:
+            return
+        hot = min(range(S), key=lambda s: (-scores[s], s))
+        if scores[hot] < cfg.rebalance_hot_factor * mean:
+            return
+        donors = []
+        for s in range(S):
+            if s == hot or scores[s] > cfg.rebalance_cold_factor * mean:
+                continue
+            reps = self.shard_replicas(s)
+            movable = [r for r in reps if r is not rep]
+            # the donor must keep a serving path: ≥1 replica always, and
+            # ≥ cache_replication while it holds live cache entries
+            keep = max(1, cfg.cache_replication
+                       if self.shards.shards[s].cache_size > 0 else 1)
+            if len(reps) - 1 < keep or not movable:
+                continue
+            donors.append((scores[s], s))
+        if not donors:
+            return
+        _, cold = min(donors)
+        self._move_replica(cold, hot, t, exclude=rep)
+        self._last_move = t
+
+    def _move_replica(self, src: int, dst: int, t: float,
+                      exclude: Optional[_Replica] = None):
+        """Re-home one replica of shard ``src`` onto shard ``dst``. The
+        donor's in-flight children are checkpointed (one ``preempt``
+        dispatch) and re-queued on shard ``src``'s scheduler
+        CHECKPOINT-INTACT — shard-portable checkpoints resume
+        bit-identically on the remaining replicas. This is a planned move,
+        not a failure: nothing restarts from scratch."""
+        cands = [r for r in self.shard_replicas(src) if r is not exclude]
+        donor = min(cands, key=lambda r: (len(r.in_flight), r.rid))
+        sched = self.schedulers[src]
+        if donor.in_flight:
+            pairs = donor.engine.preempt(list(donor.in_flight.keys()))
+            for rid, ckpt in pairs:
+                req = donor.in_flight.pop(rid)
+                sched.requeue_preempted(req, ckpt, t)
+                # a planned move is load balancing, not a deadline rescue:
+                # don't burn the starvation cap (max_preemptions) — a
+                # moved child must stay evictable for truly urgent work
+                req.preemptions -= 1
+        self.replicas.remove(donor)
+        new = self._add_shard_replica(dst)
+        new.clock = max(new.clock, donor.clock)
+        self.metrics.rebalances += 1
+
+    def _cache_entry_budget(self, s: int) -> float:
+        """Live-entry budget of shard ``s``'s cache segment: the tighter
+        of ``cache_max_entries`` and the row headroom left under
+        ``replica_max_rows`` (inf when both are off)."""
+        budget = math.inf
+        if self.cfg.cache_max_entries > 0:
+            budget = float(self.cfg.cache_max_entries)
+        if self.cfg.replica_max_rows > 0:
+            budget = min(budget, float(self.cfg.replica_max_rows
+                                       - self.shards.shards[s].base_n))
+        return budget
+
+    def _maybe_migrate(self, t: float) -> bool:
+        """Shed the oldest cache entries of the most capacity-pressed
+        shard to the least-occupied one, BEFORE the entry/row cap forces
+        a real eviction (which would turn a repeat prompt into a miss).
+        Returns True when entries moved."""
+        cfg = self.cfg
+        S = self.shards.num_shards
+        occ = []
+        for s in range(S):
+            b = self._cache_entry_budget(s)
+            # b == 0 (frozen rows exactly fill replica_max_rows): the
+            # shard can hold no cache entries at all — no pressure to
+            # shed, and the recipient headroom check excludes it anyway
+            occ.append(self.shards.shards[s].cache_size / b
+                       if math.isfinite(b) and b > 0 else 0.0)
+        donor = min(range(S), key=lambda s: (-occ[s], s))
+        if occ[donor] < cfg.rebalance_migrate_watermark:
+            return False
+        batch = min(cfg.rebalance_migrate_batch,
+                    self.shards.shards[donor].cache_size)
+        if batch <= 0:
+            return False
+        recips = [s for s in range(S) if s != donor
+                  and occ[s] < occ[donor]
+                  and (self.shards.shards[s].cache_size + batch
+                       <= cfg.rebalance_migrate_watermark
+                       * self._cache_entry_budget(s))]
+        if not recips:
+            return False
+        dst = min(recips, key=lambda s: (occ[s], s))
+        moved, evicted = self.shards.migrate_entries(donor, dst, batch,
+                                                     t_now=t)
+        for gone in evicted:
+            self.cache_meta.pop(gone, None)
+            self.metrics.cache_evictions += 1
+        # the donor's arrays changed even when nothing moved (extraction
+        # TTL-tombstones expired rows) — its replicas must see the swap
+        # or lookups keep surfacing tombstoned rows as candidates
+        self._broadcast_shard(donor)
+        if not moved:
+            return False
+        self.metrics.migrated_entries += len(moved)
+        self._broadcast_shard(dst)
+        self._ensure_cache_replication(dst)
+        return True

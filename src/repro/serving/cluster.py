@@ -394,10 +394,15 @@ class ClusterSim:
                                  for r in i.active.values()), 64))
             fb.decode_stall_frac = avg_stall / max(avg_stall + step * delta,
                                                    1e-9)
-        # surface pool-level preemption counters for cluster summaries
+        # surface pool-level preemption + rebalance counters for cluster
+        # summaries (per-shard p95 wait keys exist only for sharded pools)
         pm = self.vector_pool.metrics
         self.metrics.pool_preemptions = pm.preemptions
         self.metrics.pool_resumes = pm.resumes
+        self.metrics.pool_rebalances = pm.rebalances
+        self.metrics.pool_migrations = pm.migrated_entries
+        self.metrics.pool_shard_p95_wait = {
+            s: pm.shard_p95_wait(s) for s in sorted(pm.shard_waits)}
 
     # ----------------------------------------------------------- failures
     def kill_prefill(self, idx: int):

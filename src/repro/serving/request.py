@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -61,6 +61,12 @@ class ClusterMetrics:
     # semantic answer cache
     cache_hits: int = 0
     saved_prefill_tokens: int = 0  # prompt tokens never prefilled (hits)
+    # workload-adaptive shard rebalancing (stamped by ClusterSim; all zero
+    # for monolithic pools or with rebalance_enabled=False)
+    pool_rebalances: int = 0  # replicas moved cold shard → hot shard
+    pool_migrations: int = 0  # cache entries re-homed between shards
+    pool_shard_p95_wait: Dict[int, float] = dataclasses.field(
+        default_factory=dict)  # per-shard recent child wait p95
 
     def summary(self, t_elapsed: float) -> dict:
         fin = self.finished
@@ -84,6 +90,9 @@ class ClusterMetrics:
             "re_prefills": sum(r.re_prefills for r in fin),
             "pool_preemptions": self.pool_preemptions,
             "pool_resumes": self.pool_resumes,
+            "pool_rebalances": self.pool_rebalances,
+            "pool_migrations": self.pool_migrations,
+            "pool_shard_p95_wait": dict(self.pool_shard_p95_wait),
             "cache_hits": self.cache_hits,
             "cache_hit_rate": self.cache_hits / max(len(fin), 1),
             "saved_prefill_tokens": self.saved_prefill_tokens,

@@ -126,6 +126,14 @@ def insert_batch(db, graph, rows, vecs, nbrs, *, metric: str = "l2"):
     return db, graph
 
 
+@jax.jit
+def _gather_rows(db, rows):
+    """One fixed-shape gather of ``rows`` (power-of-two padded, −1 =
+    padding clamped to row 0 and dropped host-side) — the device half of
+    :meth:`OnlineIndex.extract_entries`."""
+    return db[jnp.clip(rows, 0, db.shape[0] - 1)]
+
+
 class OnlineIndex:
     """Capacity-segmented growable index shared by its owning replicas.
 
@@ -202,9 +210,13 @@ class OnlineIndex:
         return 0, self.corpus_n
 
     def cache_vectors(self) -> np.ndarray:
+        """Host view of the cache segment's rows-ever-used (tombstoned
+        slots included — callers filter by :meth:`is_live`)."""
         return np.asarray(self.db)[self.base_n:self.base_n + self.cache_rows]
 
     def is_live(self, global_row: int) -> bool:
+        """Whether ``global_row`` is a currently-live cache entry (False
+        for corpus rows, tombstoned slots and out-of-range rows)."""
         loc = global_row - self.base_n
         return 0 <= loc < self.cache_rows and bool(self._live[loc])
 
@@ -294,6 +306,65 @@ class OnlineIndex:
                 order = np.argsort(self._t_insert[live], kind="stable")
                 self._evict_locals(live[order][:over].tolist())
 
+    # ------------------------------------------------------- migration
+    def extract_entries(self, n: int, t_now: float = 0.0):
+        """Remove up to ``n`` of the OLDEST live cache entries for
+        migration to another index (shard rebalancing).
+
+        Args: ``n`` — max entries to extract; ``t_now`` — wall clock, used
+        to TTL-evict expired entries FIRST (an expired answer is evicted
+        through the normal path, never migrated).
+
+        Returns ``(rows, vecs, born)``: the extracted entries' global row
+        ids (as they were), their vectors — ONE fixed-shape
+        power-of-two-padded gather dispatch (:func:`_gather_rows`) — and
+        their original insert timestamps.
+
+        Invariants: the donor slots are tombstoned through the exact PR-4
+        eviction path (db pushed far away, adjacency cleared, in-segment
+        incoming edges cut, slot freed for reuse), so the extracted rows
+        land in ``drain_evicted()`` — a caller re-homing the entries must
+        intercept them there or stale-metadata guards will retire live
+        answers."""
+        if self.ttl > 0:
+            self._evict_for(0, t_now)
+        live = np.flatnonzero(self._live[:self.cache_rows])
+        order = np.argsort(self._t_insert[live], kind="stable")
+        take = live[order][:n]
+        m = len(take)
+        if m == 0:
+            return (np.zeros(0, np.int64),
+                    np.zeros((0, self.dim), np.float32),
+                    np.zeros(0, np.float64))
+        rows = (self.base_n + take).astype(np.int64)
+        pad = (1 << max(m - 1, 0).bit_length()) - m
+        rows_p = np.concatenate([rows,
+                                 np.full(pad, -1, np.int64)]).astype(np.int32)
+        vecs = np.asarray(_gather_rows(self.db, jnp.asarray(rows_p)))[:m]
+        born = self._t_insert[take].copy()
+        self._evict_locals(take.tolist())
+        return rows, vecs.copy(), born
+
+    def adopt_entries(self, vecs, born, neighbor_lists=None,
+                      t_now: float = 0.0) -> List[int]:
+        """Adopt entries extracted from another index (the recipient half
+        of a migration) in one jitted ``insert_batch`` dispatch.
+
+        Args: ``vecs`` (B, d) — migrated vectors; ``born`` (B,) — their
+        ORIGINAL insert timestamps, preserved so TTL staleness keeps being
+        judged against the first insertion, not the migration;
+        ``neighbor_lists`` — per-entry candidate neighbor ids in THIS
+        index's row space (None = random long edges only); ``t_now`` —
+        wall clock for the recipient's own TTL/capacity eviction pass.
+
+        Returns the adopted entries' row ids here, aligned with ``vecs``.
+        Adoption may evict this index's oldest entries to fit under
+        ``max_entries`` — drain them as usual."""
+        if neighbor_lists is None:
+            neighbor_lists = [None] * len(vecs)
+        return self.insert_many(vecs, neighbor_lists, t_now=t_now,
+                                t_each=born)
+
     # ---------------------------------------------------------- inserts
     def insert(self, vec: np.ndarray,
                neighbor_ids: Optional[Sequence[int]] = None,
@@ -302,13 +373,16 @@ class OnlineIndex:
         return self.insert_many([vec], [neighbor_ids], t_now=t_now)[0]
 
     def insert_many(self, vecs, neighbor_lists,
-                    t_now: float = 0.0) -> List[int]:
+                    t_now: float = 0.0,
+                    t_each: Optional[Sequence[float]] = None) -> List[int]:
         """Insert B vectors in one ``insert_batch`` dispatch.
 
         ``neighbor_lists[i]`` holds the search-selected candidate ids for
         vector i (global ids; anything outside the live cache segment —
         corpus ids, −1 padding, tombstoned rows, this batch's own rows —
-        is filtered host-side; at most ``degree`` survive)."""
+        is filtered host-side; at most ``degree`` survive). ``t_each``
+        (migration adoption) overrides the per-entry insert timestamp;
+        TTL/capacity eviction ahead of the batch still uses ``t_now``."""
         B = len(vecs)
         self._evict_for(B, t_now)
         # allocate local slots: reuse evicted slots first, then high-water.
@@ -365,9 +439,10 @@ class OnlineIndex:
         self.db, self.graph = insert_batch(
             self.db, self.graph, jnp.asarray(rows_p), jnp.asarray(vecs_p),
             jnp.asarray(nbrs_p), metric=self.metric)
-        for loc in locs:
+        for i, loc in enumerate(locs):
             self._live[loc] = True
-            self._t_insert[loc] = t_now
+            self._t_insert[loc] = t_now if t_each is None \
+                else float(t_each[i])
         self.cache_size += B
         return rows
 

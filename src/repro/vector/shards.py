@@ -21,7 +21,10 @@ scatter–gather merge. Frozen local rows map to their original corpus row;
 cache rows get globally-unique ids assigned at insert time
 (``[n, n + total inserts)``), stable across eviction/reuse of the
 underlying slot — a reused slot gets a FRESH global id, so a stale result
-can never alias a newer answer's id.
+can never alias a newer answer's id — AND stable across migration between
+shards (``migrate_entries`` re-homes a gid onto the recipient with its
+original insert timestamp, so pool answer metadata and TTL staleness
+guards are untouched by rebalancing).
 
 Routing: shard selection IS a coarse-quantizer pass
 (``ivf.coarse_probe`` over the shard centroids). Fan-out-all (``nprobe >=
@@ -217,6 +220,78 @@ class ShardedIndex:
         self._global_of[s][local_row] = gid
         self._gid_loc[gid] = (s, local_row)
         return gid, evicted
+
+    # ---------------------------------------------------------- migration
+    def migrate_entries(self, src: int, dst: int, n: int,
+                        t_now: float = 0.0):
+        """Move up to ``n`` of shard ``src``'s oldest live cache entries
+        to shard ``dst`` (load/capacity rebalancing).
+
+        Global cache ids are STABLE across the move: a migrated gid keeps
+        serving (``born_at``, ``to_global`` via the recipient, pool
+        ``cache_meta``) with its original insert timestamp, so TTL
+        staleness guards are unaffected. The donor slots are tombstoned
+        through the eviction path and their drain is intercepted HERE —
+        only entries genuinely retired by the move (TTL-expired at
+        extract time, or the recipient's own capacity eviction during
+        adoption) are reported back.
+
+        Adopted entries are wired into the recipient's cache graph with
+        host-side exact nearest live neighbors (deterministic — no engine
+        search in the migration path) plus the usual random long edges.
+
+        Returns ``(moved_gids, evicted_gids)``."""
+        assert src != dst
+        donor, recip = self.shards[src], self.shards[dst]
+        rows, vecs, born = donor.extract_entries(n, t_now=t_now)
+        evicted: List[int] = []
+
+        def _retire(shard_idx: int, drained) -> None:
+            gmap = self._global_of[shard_idx]
+            for loc_row in drained:
+                if loc_row < len(gmap) and gmap[loc_row] >= 0:
+                    gid = int(gmap[loc_row])
+                    evicted.append(gid)
+                    self._gid_loc.pop(gid, None)
+                    gmap[loc_row] = -1
+
+        moved_gids: List[int] = []
+        src_map = self._global_of[src]
+        migrated = set()
+        for r in rows:
+            r = int(r)
+            moved_gids.append(int(src_map[r]))
+            src_map[r] = -1
+            migrated.add(r)
+        # everything else the extract drained was a real (TTL) eviction
+        _retire(src, [r for r in donor.drain_evicted() if r not in migrated])
+        if not moved_gids:
+            return [], evicted
+        nbr_lists = self._exact_cache_neighbors(recip, vecs)
+        new_rows = recip.adopt_entries(vecs, born, nbr_lists, t_now=t_now)
+        # the recipient's own capacity/TTL eviction during adoption IS real
+        _retire(dst, recip.drain_evicted())
+        self._ensure_map(dst, max(new_rows) + 1)
+        dst_map = self._global_of[dst]
+        for gid, r in zip(moved_gids, new_rows):
+            dst_map[r] = gid
+            self._gid_loc[gid] = (dst, int(r))
+        return moved_gids, evicted
+
+    @staticmethod
+    def _exact_cache_neighbors(recip: OnlineIndex, vecs: np.ndarray):
+        """Exact nearest LIVE cache rows of ``recip`` per migrated vector
+        (candidate lists for adoption; None when the recipient cache is
+        empty — random long edges alone wire the first arrivals)."""
+        live = np.flatnonzero(recip._live[:recip.cache_rows])
+        if len(live) == 0:
+            return None
+        cand_rows = recip.base_n + live
+        cand = np.asarray(recip.db)[cand_rows]
+        k = min(max(recip.degree - recip.long_edges, 1), len(live))
+        ids_l, _ = exact_knn(cand, np.asarray(vecs, np.float32), k,
+                             metric=recip.metric)
+        return [cand_rows[row].tolist() for row in ids_l]
 
     @property
     def cache_size(self) -> int:

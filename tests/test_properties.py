@@ -1,12 +1,23 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Property tests on the system's invariants, runnable two ways.
+
+Each invariant lives in a ``_check_*`` function taking explicit
+parameters. When hypothesis is installed (CI installs ``.[dev]``), the
+``@given`` wrappers search the parameter space adversarially. The dev
+container has no package index, so every property ALSO has a seeded
+in-suite randomized twin (``test_*_seeded``) that draws a fixed trial
+sweep with ``np.random.default_rng`` — the invariants run on every
+environment instead of silently skipping (the PR-4 pattern for the
+sharded-merge property, applied file-wide)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="hypothesis not installed; property tests skipped")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # dev container: seeded twins below still run
+    HAS_HYPOTHESIS = False
 
 from repro.vector.cagra import _hash_probe, _merge_topm
 
@@ -14,20 +25,11 @@ SETTINGS = dict(max_examples=25, deadline=None)
 
 
 # ---------------------------------------------------------------------------
-# scatter–gather merge (sharded serving): per-shard exact top-k merged ==
-# monolithic exact top-k
+# invariant bodies (shared by the hypothesis wrappers and the seeded twins)
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(24, 240),
-    s=st.integers(1, 8),
-    k=st.integers(1, 12),
-    q=st.integers(1, 6),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_sharded_exact_merge_equals_monolithic(n, s, k, q, seed):
+def _check_sharded_exact_merge(n, s, k, q, seed):
     """For ANY random corpus, shard count and k: balanced-k-means
     partition + exhaustive per-shard top-k + partial-top-k merge is the
     monolithic exact oracle. Continuous random floats make ties
@@ -48,18 +50,7 @@ def test_sharded_exact_merge_equals_monolithic(n, s, k, q, seed):
     np.testing.assert_allclose(dists, true_d, rtol=1e-5, atol=1e-6)
 
 
-# ---------------------------------------------------------------------------
-# topM merge (the per-request candidate list of §3.2)
-# ---------------------------------------------------------------------------
-
-
-@settings(**SETTINGS)
-@given(
-    m=st.integers(4, 16),
-    c=st.integers(1, 24),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_merge_topm_invariants(m, c, seed):
+def _check_merge_topm(m, c, seed):
     rng = np.random.default_rng(seed)
 
     # distance is a pure function of id (as in real search) — duplicate ids
@@ -105,55 +96,36 @@ def test_merge_topm_invariants(m, c, seed):
             assert prev.get(int(i), False)
 
 
-# ---------------------------------------------------------------------------
-# visited hash table (§3.2 'admit only first-seen candidates')
-# ---------------------------------------------------------------------------
-
-
-@settings(**SETTINGS)
-@given(
-    v=st.sampled_from([64, 128, 256]),
-    n=st.integers(1, 40),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_visited_insert_then_seen(v, n, seed):
+def _check_visited_insert_then_seen(v, n, seed):
     rng = np.random.default_rng(seed)
     ids = rng.choice(10_000, size=n, replace=False).astype(np.int32)
     vis = jnp.full((v,), -1, jnp.int32)
     vis, seen_first = jax.jit(_hash_probe)(vis, jnp.asarray(ids))
+    # membership must be judged against the table the second probe READS:
+    # the second pass itself inserts first-pass scatter-conflict losers,
+    # which correctly report unseen (the twin sweep caught the old
+    # after-the-fact check as a false failure)
+    vis_np = np.asarray(vis)
     vis, seen_second = jax.jit(_hash_probe)(vis, jnp.asarray(ids))
     # first pass: nothing previously inserted may claim "seen" unless the
     # table overflowed (insert failure -> recompute, correctness preserved)
     assert not np.any(np.asarray(seen_first))
     # second pass: everything that fit must be seen; entries that could not
-    # be inserted (full probe window) may report unseen — count them
+    # be inserted (full probe window / lost slot conflicts) may report
+    # unseen — the recompute-not-wrong degradation
     second = np.asarray(seen_second)
-    vis_np = np.asarray(vis)
     inserted = np.isin(ids, vis_np)
     assert np.all(second[inserted])
 
 
-@settings(**SETTINGS)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_visited_dummies_never_seen(seed):
+def _check_visited_dummies_never_seen():
     vis = jnp.full((128,), -1, jnp.int32)
     ids = jnp.full((8,), -1, jnp.int32)
     vis, seen = jax.jit(_hash_probe)(vis, ids)
     assert not np.any(np.asarray(seen))
 
 
-# ---------------------------------------------------------------------------
-# chunked vocab loss == full-logits loss
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=10, deadline=None)
-@given(
-    b=st.integers(1, 3),
-    s=st.sampled_from([8, 16, 32]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_chunked_xent_matches_full(b, s, seed):
+def _check_chunked_xent(b, s, seed):
     from repro.configs import get_smoke_config
     from repro.models import model_zoo, transformer
 
@@ -172,18 +144,7 @@ def test_chunked_xent_matches_full(b, s, seed):
     assert abs(loss_chunked - loss_full) < 1e-3 * max(1.0, abs(loss_full))
 
 
-# ---------------------------------------------------------------------------
-# mLSTM chunked-parallel forward == recurrent decode
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=8, deadline=None)
-@given(
-    s=st.sampled_from([8, 16, 32]),
-    chunk=st.sampled_from([4, 8, 64]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_mlstm_chunked_equals_recurrent(s, chunk, seed):
+def _check_mlstm_chunked_equals_recurrent(s, chunk, seed):
     from repro.configs import get_smoke_config
     from repro.models import xlstm
 
@@ -204,18 +165,7 @@ def test_mlstm_chunked_equals_recurrent(s, chunk, seed):
                                rtol=5e-4, atol=5e-4)
 
 
-# ---------------------------------------------------------------------------
-# mamba chunked scan == naive sequential recurrence
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=8, deadline=None)
-@given(
-    s=st.sampled_from([8, 16, 32]),
-    chunk=st.sampled_from([4, 8, 64]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_mamba_chunked_scan_matches_sequential(s, chunk, seed):
+def _check_mamba_chunked_scan(s, chunk, seed):
     from repro.models.mamba import _chunked_linear_scan
 
     rng = np.random.default_rng(seed)
@@ -233,3 +183,115 @@ def test_mamba_chunked_scan_matches_sequential(s, chunk, seed):
     np.testing.assert_allclose(np.asarray(h_seq), ref, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(h_end), ref[:, -1], rtol=1e-5,
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis wrappers (adversarial search — CI, where .[dev] is installed)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(24, 240), s=st.integers(1, 8),
+           k=st.integers(1, 12), q=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    def test_sharded_exact_merge_equals_monolithic(n, s, k, q, seed):
+        _check_sharded_exact_merge(n, s, k, q, seed)
+
+    @settings(**SETTINGS)
+    @given(m=st.integers(4, 16), c=st.integers(1, 24),
+           seed=st.integers(0, 2**31 - 1))
+    def test_merge_topm_invariants(m, c, seed):
+        _check_merge_topm(m, c, seed)
+
+    @settings(**SETTINGS)
+    @given(v=st.sampled_from([64, 128, 256]), n=st.integers(1, 40),
+           seed=st.integers(0, 2**31 - 1))
+    def test_visited_insert_then_seen(v, n, seed):
+        _check_visited_insert_then_seen(v, n, seed)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_visited_dummies_never_seen(seed):
+        _check_visited_dummies_never_seen()
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 3), s=st.sampled_from([8, 16, 32]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_chunked_xent_matches_full(b, s, seed):
+        _check_chunked_xent(b, s, seed)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_mlstm_chunked_equals_recurrent(s, chunk, seed):
+        _check_mlstm_chunked_equals_recurrent(s, chunk, seed)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_mamba_chunked_scan_matches_sequential(s, chunk, seed):
+        _check_mamba_chunked_scan(s, chunk, seed)
+else:
+    def test_hypothesis_absent_twins_cover():
+        """Marker: hypothesis is not installed here; the seeded twins
+        below carry the invariants (CI runs both via .[dev])."""
+        assert not HAS_HYPOTHESIS
+
+
+# ---------------------------------------------------------------------------
+# seeded in-suite twins (always run, no hypothesis required)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_exact_merge_seeded():
+    rng0 = np.random.default_rng(0xA11CE)
+    for _ in range(15):
+        _check_sharded_exact_merge(int(rng0.integers(24, 241)),
+                                   int(rng0.integers(1, 9)),
+                                   int(rng0.integers(1, 13)),
+                                   int(rng0.integers(1, 7)),
+                                   int(rng0.integers(0, 2**31 - 1)))
+
+
+def test_merge_topm_invariants_seeded():
+    rng0 = np.random.default_rng(0xB0B)
+    for _ in range(15):
+        _check_merge_topm(int(rng0.integers(4, 17)),
+                          int(rng0.integers(1, 25)),
+                          int(rng0.integers(0, 2**31 - 1)))
+
+
+def test_visited_insert_then_seen_seeded():
+    rng0 = np.random.default_rng(0xCAFE)
+    for _ in range(10):
+        _check_visited_insert_then_seen(
+            int(rng0.choice([64, 128, 256])), int(rng0.integers(1, 41)),
+            int(rng0.integers(0, 2**31 - 1)))
+
+
+def test_visited_dummies_never_seen_seeded():
+    _check_visited_dummies_never_seen()
+
+
+def test_chunked_xent_matches_full_seeded():
+    rng0 = np.random.default_rng(0xD00D)
+    for _ in range(3):
+        _check_chunked_xent(int(rng0.integers(1, 4)),
+                            int(rng0.choice([8, 16, 32])),
+                            int(rng0.integers(0, 2**31 - 1)))
+
+
+def test_mlstm_chunked_equals_recurrent_seeded():
+    rng0 = np.random.default_rng(0xE17)
+    for _ in range(2):
+        _check_mlstm_chunked_equals_recurrent(
+            int(rng0.choice([8, 16, 32])), int(rng0.choice([4, 8, 64])),
+            int(rng0.integers(0, 2**31 - 1)))
+
+
+def test_mamba_chunked_scan_matches_sequential_seeded():
+    rng0 = np.random.default_rng(0xF00)
+    for _ in range(3):
+        _check_mamba_chunked_scan(
+            int(rng0.choice([8, 16, 32])), int(rng0.choice([4, 8, 64])),
+            int(rng0.integers(0, 2**31 - 1)))

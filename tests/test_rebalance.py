@@ -1,0 +1,320 @@
+"""Workload-adaptive shard rebalancing (core/trinity_pool.ShardedVectorPool
++ vector/shards.migrate_entries + vector/online.extract/adopt_entries):
+result-neutral replica reassignment, gid-stable cache-entry migration,
+cooldown/hysteresis anti-thrash, checkpoint portability across a planned
+move, and drain_evicted/cache_meta consistency."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import ShardedVectorPool
+from repro.vector.dataset import make_dataset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(3000, 32, num_clusters=16, num_queries=64,
+                               seed=1)
+    return db, queries
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=3000, dim=32, graph_degree=16, max_requests=8,
+                top_m=32, parents_per_step=2, task_batch=2048,
+                visited_slots=512, top_k=10, semantic_cache_enabled=True,
+                cache_capacity=64, num_shards=4, rebalance_enabled=True,
+                rebalance_cooldown_s=0.002)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+def _static_cfg(**kw):
+    """Seed-matched static baseline: rebalancing machinery ON (per-shard
+    engine seeds) but thresholds set so no action can ever trigger —
+    behaviorally the PR-4 static partition."""
+    base = dict(rebalance_hot_factor=1e18,
+                rebalance_migrate_watermark=1e18)
+    base.update(kw)
+    return _cfg(**base)
+
+
+def _skewed_stream(pool, queries, n=120, gap=5e-5):
+    """Poisson-ish probe stream aimed at ONE shard's territory."""
+    t = 0.0
+    for i in range(n):
+        q = queries[0] + np.float32(1e-3 * (i % 7))
+        pool.submit(VectorRequest(i, "prefill", q, t, t + 0.025))
+        t += gap
+    pool.run_until(t + 2.0)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# replica reassignment
+# ---------------------------------------------------------------------------
+
+
+def test_rebalance_moves_replicas_to_hot_shard(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(nprobe_shards=1), db,
+                             replicas_per_shard=2, seed=0)
+    hot = int(pool.shards.route(queries[0], 1)[0, 0])
+    _skewed_stream(pool, queries)
+    assert len(pool.metrics.completed) == 120  # nothing lost
+    assert pool.metrics.rebalances > 0
+    assert len(pool.shard_replicas(hot)) > 2  # gained replicas
+    # donors never drained below one serving replica
+    for s in range(4):
+        assert len(pool.shard_replicas(s)) >= 1
+    # load accounting surfaced: the hot shard saw the probe traffic
+    rows = pool.shard_load_summary(0.01)
+    assert rows[hot]["probe_qps"] > 0
+    assert pool.metrics.shard_p95_wait(hot) >= 0.0
+    assert hot in pool.metrics.shard_waits
+
+
+def test_reassignment_is_result_neutral(setup):
+    """Recall delta exactly 0 by construction: with rebalancing enabled,
+    replicas of a shard share one engine seed, so a child's results are a
+    pure function of (rid, qvec, shard) — the rebalance arm returns
+    bit-identical ids/dists to the seed-matched static arm even though
+    different (moved) replicas served the requests."""
+    db, queries = setup
+    static = ShardedVectorPool(_static_cfg(nprobe_shards=1), db,
+                               replicas_per_shard=2, seed=0)
+    moved = ShardedVectorPool(_cfg(nprobe_shards=1), db,
+                              replicas_per_shard=2, seed=0)
+    _skewed_stream(static, queries)
+    _skewed_stream(moved, queries)
+    assert static.metrics.rebalances == 0
+    assert moved.metrics.rebalances > 0
+    a = {r.rid: r for r in static.metrics.completed}
+    b = {r.rid: r for r in moved.metrics.completed}
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid].result_ids, b[rid].result_ids)
+        np.testing.assert_array_equal(a[rid].result_dists,
+                                      b[rid].result_dists)
+
+
+def test_cooldown_and_hysteresis_prevent_thrash(setup):
+    """Oscillating load must not ping-pong replicas: a move is allowed at
+    most once per cooldown, and only when hot AND cold sides clear the
+    two-sided hysteresis band."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(nprobe_shards=1, rebalance_cooldown_s=10.0),
+                             db, replicas_per_shard=2, seed=0)
+    # alternate the skew between two shards' territories every probe:
+    # per-shard demand oscillates, but within one cooldown at most one
+    # move may happen regardless
+    t = 0.0
+    targets = [queries[0], queries[1]]
+    for i in range(80):
+        pool.submit(VectorRequest(i, "prefill", targets[i % 2], t, t + 0.025))
+        t += 5e-5
+    pool.run_until(t + 2.0)
+    assert pool.metrics.rebalances <= 1  # cooldown caps the rate
+    assert len(pool.metrics.completed) == 80
+
+    # hysteresis: perfectly balanced load never triggers a move at all
+    pool2 = ShardedVectorPool(_cfg(rebalance_cooldown_s=0.0), db,
+                              replicas_per_shard=2, seed=0)
+    t = 0.0
+    for i in range(64):
+        pool2.submit(VectorRequest(i, "prefill", queries[i % 16], t,
+                                   t + 0.025))
+        t += 2e-4
+    pool2.run_until(t + 2.0)
+    assert pool2.metrics.rebalances == 0
+
+
+def test_checkpoints_survive_replica_reassignment(setup):
+    """A planned move checkpoints the donor's in-flight children and
+    re-queues them CHECKPOINT-INTACT (no restart from scratch): every
+    request completes with results identical to the undisturbed run."""
+    db, queries = setup
+    static = ShardedVectorPool(_static_cfg(nprobe_shards=1), db,
+                               replicas_per_shard=2, seed=0)
+    pool = ShardedVectorPool(_static_cfg(nprobe_shards=1), db,
+                             replicas_per_shard=2, seed=0)
+    for p in (static, pool):
+        for i in range(24):  # burst at one shard: 8 slots => queue + flight
+            p.submit(VectorRequest(i, "prefill",
+                                   queries[0] + np.float32(1e-3 * (i % 7)),
+                                   0.0, 0.025))
+    static.run_until(1.0)
+    pool.run_until(1e-4)  # some children are mid-flight now
+    busy = max((r for r in pool.replicas), key=lambda r: len(r.in_flight))
+    src = busy.shard
+    n_inflight = len(busy.in_flight)
+    assert n_inflight > 0
+    dst = (src + 1) % 4
+    pool._move_replica(src, dst, 1e-4, exclude=None)
+    assert pool.metrics.rebalances == 1
+    # checkpoint-intact: the requeued children carry their checkpoints
+    resumed = [r for r in pool.schedulers[src].q_edf
+               if r.checkpoint is not None]
+    assert 0 < len(resumed) <= n_inflight
+    pool.run_until(1.0)
+    a = {r.rid: r for r in static.metrics.completed}
+    b = {r.rid: r for r in pool.metrics.completed}
+    assert set(b) == set(range(24))
+    for rid in a:
+        np.testing.assert_array_equal(a[rid].result_ids, b[rid].result_ids)
+    assert pool.metrics.resumes > 0  # checkpoints actually re-seated
+    # a planned move is not a deadline rescue: it must not burn the
+    # starvation cap (max_preemptions) of the children it relocated
+    assert all(r.preemptions == 0 for r in pool.metrics.completed)
+
+
+def test_engine_seed_gating(setup):
+    """Knob off: per-replica engine seeds, exactly the PR-4 construction
+    (bit-identity). Knob on: replicas of one shard share the shard seed
+    (the invariant the result-neutrality proof rests on)."""
+    db, _ = setup
+    off = ShardedVectorPool(_cfg(rebalance_enabled=False), db,
+                            replicas_per_shard=2, seed=0)
+    on = ShardedVectorPool(_cfg(), db, replicas_per_shard=2, seed=0)
+    for s in range(4):
+        keys_off = [np.asarray(r.engine._key).tolist()
+                    for r in off.shard_replicas(s)]
+        keys_on = [np.asarray(r.engine._key).tolist()
+                   for r in on.shard_replicas(s)]
+        assert keys_on[0] == keys_on[1]  # shared per-shard seed
+        assert keys_off[0] != keys_off[1]  # legacy per-replica seeds
+
+
+# ---------------------------------------------------------------------------
+# cache-entry migration
+# ---------------------------------------------------------------------------
+
+
+def _insert_skewed(pool, db, n, t_gap=2e-3, t0=0.0):
+    rng = np.random.default_rng(0)
+    t = t0
+    for i in range(n):
+        pool.submit_insert(db[7] + rng.normal(0, .01, 32).astype(np.float32),
+                           meta={"tokens": i}, t_now=t)
+        t += t_gap
+        pool.run_until(t)
+    pool.run_until(t + 1.0)
+    return t + 1.0
+
+
+def test_migration_is_recall_neutral_for_cache_hits(setup):
+    """Every inserted answer keeps serving after migration — same gid,
+    same metadata — exactly as in the unbounded no-migration oracle."""
+    db, queries = setup
+    oracle = ShardedVectorPool(_static_cfg(cache_capacity=16), db,
+                               replicas_per_shard=2, seed=0)
+    mig = ShardedVectorPool(
+        _cfg(cache_capacity=16, cache_max_entries=12,
+             rebalance_migrate_watermark=0.6, rebalance_migrate_batch=4,
+             rebalance_cooldown_s=1e-3), db, replicas_per_shard=2, seed=0)
+    t_end = _insert_skewed(oracle, db, 20)
+    t_end = _insert_skewed(mig, db, 20)
+    assert mig.metrics.migrated_entries > 0
+    assert mig.metrics.cache_evictions == 0  # migration pre-empted the cap
+    assert oracle.cache_size == mig.cache_size == 20
+    for gid in oracle.cache_meta:
+        assert mig.meta_at(gid, t_end) == oracle.meta_at(gid, t_end)
+
+
+def test_corpus_search_bit_identical_across_migration(setup):
+    """Migration only touches the cache segment: corpus probes return
+    bit-identical results with and without a migration in between (the
+    segments are disjoint graph components)."""
+    db, queries = setup
+    plain = ShardedVectorPool(
+        _static_cfg(cache_capacity=16, cache_max_entries=12,
+                    rebalance_cooldown_s=1e-3), db,
+        replicas_per_shard=2, seed=0)
+    mig = ShardedVectorPool(
+        _cfg(cache_capacity=16, cache_max_entries=12,
+             rebalance_migrate_watermark=0.6, rebalance_migrate_batch=4,
+             rebalance_cooldown_s=1e-3), db, replicas_per_shard=2, seed=0)
+    _insert_skewed(plain, db, 20)
+    _insert_skewed(mig, db, 20)
+    assert mig.metrics.migrated_entries > 0 and \
+        plain.metrics.migrated_entries == 0
+    for p in (plain, mig):
+        t = 10.0
+        for i in range(16):
+            p.submit(VectorRequest(1000 + i, "prefill", queries[i], t,
+                                   t + 0.025))
+            t += 2e-4
+        p.run_until(t + 1.0)
+    a = {r.rid: r for r in plain.metrics.completed if r.kind == "prefill"}
+    b = {r.rid: r for r in mig.metrics.completed if r.kind == "prefill"}
+    assert set(a) == set(b) and len(a) == 16
+    for rid in a:
+        np.testing.assert_array_equal(a[rid].result_ids, b[rid].result_ids)
+
+
+def test_drain_and_cache_meta_consistency_after_migration(setup):
+    """The donor's eviction drain is intercepted for migrated rows — pool
+    metadata must survive the move; only genuinely retired entries (the
+    recipient's own capacity eviction) drop their answers."""
+    db, queries = setup
+    pool = ShardedVectorPool(
+        _cfg(cache_capacity=16, cache_max_entries=12,
+             rebalance_migrate_watermark=0.6, rebalance_migrate_batch=4,
+             rebalance_cooldown_s=1e-3), db, replicas_per_shard=2, seed=0)
+    t_end = _insert_skewed(pool, db, 20)
+    assert pool.metrics.migrated_entries > 0
+    # every gid's metadata survived and resolves through its NEW location
+    assert len(pool.cache_meta) == 20
+    hot = int(pool.shards.route(db[7], 1)[0, 0])
+    relocated = [gid for gid, (s, _) in pool.shards._gid_loc.items()
+                 if s != hot]
+    assert len(relocated) == pool.metrics.migrated_entries
+    for gid in pool.cache_meta:
+        assert pool.meta_at(gid, t_end) is not None
+        assert pool.shards.born_at(gid) is not None
+    # a lookup finds a migrated entry on its new shard under the OLD gid
+    vec = db[7] + np.float32(0.01)
+    pool.submit(VectorRequest(5000, "cache_lookup", vec, t_end, t_end + 0.1))
+    pool.run_until(t_end + 1.0)
+    done = {r.rid: r for r in pool.metrics.completed}
+    hit_ids = set(int(i) for i in done[5000].result_ids if i >= 0)
+    assert hit_ids & set(relocated)  # migrated rows surfaced in results
+
+
+def test_migration_preserves_ttl_staleness(setup):
+    """born_at travels with the entry: TTL expiry after a migration is
+    judged against the ORIGINAL insert time, so a stale answer cannot be
+    laundered fresh by moving shards."""
+    db, _ = setup
+    pool = ShardedVectorPool(
+        _cfg(cache_capacity=16, cache_max_entries=12, cache_ttl_s=30.0,
+             rebalance_migrate_watermark=0.6, rebalance_migrate_batch=4,
+             rebalance_cooldown_s=1e-3), db, replicas_per_shard=2, seed=0)
+    _insert_skewed(pool, db, 20, t_gap=0.5)
+    assert pool.metrics.migrated_entries > 0
+    born0 = pool.shards.born_at(3000)  # first insert (gid space starts at n)
+    assert born0 is not None
+    assert pool.meta_at(3000, born0 + 29.0) is not None
+    assert pool.meta_at(3000, born0 + 31.0) is None  # expired vs ORIGINAL birth
+
+
+def test_rebalance_disabled_is_static(setup):
+    """Knobs-off runs take the PR-4 path: zero rebalances/migrations, and
+    two identical runs are bit-identical (determinism regression)."""
+    db, queries = setup
+    outs = []
+    for _ in range(2):
+        pool = ShardedVectorPool(_cfg(rebalance_enabled=False,
+                                      nprobe_shards=1), db,
+                                 replicas_per_shard=2, seed=0)
+        _skewed_stream(pool, queries, n=40)
+        assert pool.metrics.rebalances == 0
+        assert pool.metrics.migrated_entries == 0
+        outs.append({r.rid: r for r in pool.metrics.completed})
+    assert set(outs[0]) == set(outs[1])
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[0][rid].result_ids,
+                                      outs[1][rid].result_ids)
+        assert outs[0][rid].t_completed == outs[1][rid].t_completed

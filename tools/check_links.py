@@ -1,0 +1,75 @@
+"""Offline markdown link checker for docs/ + README.md.
+
+Verifies every relative link target in the given markdown files (and
+directories, recursively) resolves to an existing file or directory, and
+that ``#anchor`` fragments match a heading in the target file (GitHub
+slug rules, simplified). External (http/https/mailto) links are skipped —
+CI has no network. Exit 1 on any broken link.
+
+Usage: PYTHONPATH=src python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# target = first whitespace-free token inside (...); an optional
+# markdown title ("...") after it must not hide the link from the check
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s[^)]*)?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def _slug(heading: str) -> str:
+    h = re.sub(r"[`*]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h).strip("-")
+
+
+def _anchors(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        return {_slug(m.group(1)) for m in HEADING_RE.finditer(f.read())}
+
+
+def _md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                for name in sorted(files):
+                    if name.endswith(".md"):
+                        yield os.path.join(root, name)
+        else:
+            yield p
+
+
+def check(paths) -> int:
+    errors = 0
+    for md in _md_files(paths):
+        base = os.path.dirname(os.path.abspath(md))
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # external scheme
+                continue
+            path, _, frag = target.partition("#")
+            resolved = os.path.normpath(os.path.join(base, path)) if path \
+                else os.path.abspath(md)
+            if not os.path.exists(resolved):
+                print(f"{md}: broken link -> {target} "
+                      f"(missing {resolved})", file=sys.stderr)
+                errors += 1
+                continue
+            if frag and resolved.endswith(".md") and \
+                    frag not in _anchors(resolved):
+                print(f"{md}: broken anchor -> {target}", file=sys.stderr)
+                errors += 1
+    if errors:
+        print(f"{errors} broken link(s)", file=sys.stderr)
+        return 1
+    print("all links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(check(sys.argv[1:] or ["README.md", "docs"]))

@@ -1,0 +1,139 @@
+"""Generate docs/configuration.md by introspecting the config dataclasses.
+
+The knob reference is NOT hand-written: this tool walks every dataclass in
+``repro.configs.base`` (``dataclasses.fields`` for name/type/default, the
+module AST + source comments for per-field descriptions) and renders one
+table per dataclass. The committed page therefore cannot drift from the
+code — CI runs ``--check`` and fails when a knob was added, removed,
+retyped, redefaulted or re-documented without regenerating.
+
+Usage:
+    PYTHONPATH=src python tools/gen_config_docs.py          # (re)write
+    PYTHONPATH=src python tools/gen_config_docs.py --check  # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import inspect
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+OUT_PATH = os.path.join(REPO, "docs", "configuration.md")
+
+HEADER = """\
+# Configuration reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with `make docs` (tools/gen_config_docs.py); CI fails
+     when this page is stale (`make docs-check`). -->
+
+Every knob in `src/repro/configs/base.py`, introspected straight from the
+dataclass definitions (name, type, default) and their source comments, so
+this table cannot drift from the code.
+"""
+
+
+def _field_comments(cls) -> dict:
+    """Per-field description harvested from the class source: contiguous
+    ``#`` lines directly above a field plus trailing comments on the
+    field's own lines."""
+    src = inspect.getsource(cls)
+    lines = src.splitlines()
+    tree = ast.parse(src).body[0]
+    out = {}
+    for node in tree.body:
+        if not isinstance(node, ast.AnnAssign) or \
+                not isinstance(node.target, ast.Name):
+            continue
+        parts = []
+        # block comment immediately above (walk upward, stop at a gap)
+        i = node.lineno - 2  # line above, 0-based
+        block = []
+        while i >= 0 and re.match(r"^\s*#", lines[i]):
+            block.append(re.sub(r"^\s*#\s?", "", lines[i]).rstrip())
+            i -= 1
+        parts.extend(reversed(block))
+        # trailing comments on the field's own line span
+        for ln in range(node.lineno - 1,
+                        (node.end_lineno or node.lineno)):
+            m = re.search(r"#\s?(.*)$", lines[ln])
+            if m:
+                parts.append(m.group(1).rstrip())
+        out[node.target.id] = " ".join(p for p in parts if p)
+    return out
+
+
+def _fmt_type(f: dataclasses.Field) -> str:
+    t = f.type
+    if not isinstance(t, str):
+        t = getattr(t, "__name__", str(t))
+    m = re.fullmatch(r"Optional\[(.*)\]", t)
+    return f"{m.group(1)} | None" if m else t
+
+
+def _fmt_default(f: dataclasses.Field) -> str:
+    if f.default is not dataclasses.MISSING:
+        return repr(f.default)
+    if f.default_factory is not dataclasses.MISSING:  # type: ignore
+        return f"{f.default_factory.__name__}()"  # type: ignore
+    return "*required*"
+
+
+def _esc(s: str) -> str:
+    return s.replace("|", "\\|")
+
+
+def render() -> str:
+    from repro.configs import base
+
+    chunks = [HEADER]
+    classes = [obj for _, obj in inspect.getmembers(base)
+               if inspect.isclass(obj) and dataclasses.is_dataclass(obj)
+               and obj.__module__ == base.__name__]
+    classes.sort(key=lambda c: inspect.getsourcelines(c)[1])
+    for cls in classes:
+        doc = inspect.getdoc(cls) or ""
+        comments = _field_comments(cls)
+        chunks.append(f"\n## `{cls.__name__}`\n")
+        if doc:
+            chunks.append(doc + "\n")
+        chunks.append("| knob | type | default | description |")
+        chunks.append("|------|------|---------|-------------|")
+        for f in dataclasses.fields(cls):
+            chunks.append(
+                f"| `{f.name}` | `{_esc(_fmt_type(f))}` "
+                f"| `{_esc(_fmt_default(f))}` "
+                f"| {_esc(comments.get(f.name, ''))} |")
+        chunks.append("")
+    return "\n".join(chunks)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) when the committed page is stale")
+    args = ap.parse_args()
+    want = render()
+    if args.check:
+        have = open(OUT_PATH).read() if os.path.exists(OUT_PATH) else ""
+        if have != want:
+            print("docs/configuration.md is STALE — run `make docs` and "
+                  "commit the result", file=sys.stderr)
+            return 1
+        print("docs/configuration.md is up to date")
+        return 0
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        f.write(want)
+    print(f"wrote {os.path.relpath(OUT_PATH, REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
