@@ -6,8 +6,8 @@
 PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
-	bench-cache bench-sharded bench-rebalance trace-check docs docs-check \
-	linkcheck
+	bench-cache bench-sharded bench-rebalance bench-chaos bench-chaos-smoke \
+	trace-check docs docs-check linkcheck
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -35,6 +35,14 @@ bench-sharded:
 
 bench-rebalance:
 	PYTHONPATH=src python -m benchmarks.bench_rebalance
+
+bench-chaos:
+	PYTHONPATH=src python -m benchmarks.bench_chaos
+
+# shrunk chaos run for CI: same arms + asserts, smaller workload, report
+# written to a temp file instead of benchmarks/BENCH_chaos.json
+bench-chaos-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_chaos --smoke
 
 trace-check:
 	PYTHONPATH=src:tests python -m scheduler_trace_driver --check

@@ -10,11 +10,12 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_architectures, bench_continuous_batching,
-                        bench_engine_dispatch, bench_preemption,
-                        bench_rebalance, bench_recall_latency,
-                        bench_roofline_stages, bench_scheduler,
-                        bench_semantic_cache, bench_sharded)
+from benchmarks import (bench_architectures, bench_chaos,
+                        bench_continuous_batching, bench_engine_dispatch,
+                        bench_preemption, bench_rebalance,
+                        bench_recall_latency, bench_roofline_stages,
+                        bench_scheduler, bench_semantic_cache,
+                        bench_sharded)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -27,6 +28,7 @@ BENCHES = {
     "supp_semantic_cache": bench_semantic_cache.run,
     "supp_sharded": bench_sharded.run,
     "supp_rebalance": bench_rebalance.run,
+    "supp_chaos": bench_chaos.run,
 }
 
 

@@ -242,6 +242,38 @@ class VectorPoolConfig:
     # forces a real eviction
     rebalance_migrate_watermark: float = 0.85
     rebalance_migrate_batch: int = 8  # cache entries moved per migration
+    # failure recovery (chaos/high-availability serving). ALL knobs default
+    # OFF: with every knob at its default the pool is bit-identical to the
+    # legacy failure path (kill_replica restarts in-flight work from
+    # scratch with an immediate re-queue, a whole-shard loss silently
+    # drops its cache entries)
+    # checkpoint rescue: snapshot every in-flight slot's SlotCheckpoint
+    # host-side after each fused chunk (one extra gather dispatch + sync
+    # per chunk); on replica death the victims RESUME from their snapshot
+    # on a surviving replica instead of restarting from scratch
+    rescue_enabled: bool = False
+    # death-retry backoff: a killed (non-rescued) request re-queues after
+    # min(backoff, half its remaining deadline slack) instead of
+    # immediately — deadline-aware so a retry never sleeps past the point
+    # of rescue. 0 = immediate re-queue (legacy)
+    retry_backoff_ms: float = 0.0
+    # death-retry cap: a request killed more than this many times completes
+    # as FAILED (empty results, counted in PoolMetrics.retries_exhausted)
+    # instead of retrying forever. 0 = unlimited retries (legacy)
+    max_retries: int = 0
+    # hedged dispatch: a per-shard child in flight longer than
+    # hedge_factor × its expected service time (est_extends × T_ext EWMA),
+    # or stuck on a quarantined straggler replica, gets a duplicate twin
+    # submitted to the same shard; the first result wins, the loser is
+    # cancelled, and the fan-out pending set dedupes so parents complete
+    # exactly once
+    hedge_enabled: bool = False
+    hedge_factor: float = 6.0
+    # cache-entry backup: keep host-side peer copies of every cache entry
+    # (vector + insert timestamp) so a whole-shard loss re-homes the lost
+    # entries onto a surviving shard (original gids + timestamps — repeat
+    # prompts still hit) instead of silently converting them to misses
+    cache_backup_enabled: bool = False
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

@@ -261,6 +261,18 @@ def evict_slots(state: EngineState, slots):
     return new_state, rows
 
 
+@jax.jit
+def snapshot_slots(state: EngineState, slots):
+    """Non-destructive ``evict_slots``: gather the full per-slot state rows
+    for ``slots`` WITHOUT deactivating them (the searches keep running).
+    The pool's checkpoint-rescue path snapshots in-flight slots host-side
+    each fused chunk so a replica death can resume instead of restart.
+    The state is not donated — it stays live on device."""
+    return (state.query_vecs[slots], state.top_ids[slots],
+            state.top_dists[slots], state.expanded[slots],
+            state.visited[slots], state.extends[slots], state.budget[slots])
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def restore_slots(state: EngineState, slots, query_vecs, top_ids, top_dists,
                   expanded, visited, extends, budgets):
@@ -562,6 +574,33 @@ class ContinuousBatchingEngine:
                 budget=int(bud[i]), top_k=self.slot_topk.pop(slot, None))))
             del self.slot_request[slot]
             self.free_slots.append(slot)
+        return out
+
+    def snapshot(self, request_ids) -> List[Tuple[int, SlotCheckpoint]]:
+        """Host-side checkpoints of the slots running ``request_ids``
+        WITHOUT evicting them (the searches keep running): one jitted
+        gather dispatch + one host sync, same cost as ``preempt`` minus
+        the slot bookkeeping. Because a fused chunk is the only thing that
+        advances slot state, a snapshot taken between chunks IS the exact
+        state at any failure landing before the next chunk — restoring it
+        on another replica over the same db/graph resumes the search
+        bit-identically (checkpoint-rescue on replica death)."""
+        if not request_ids:
+            return []
+        slot_of = {rid: slot for slot, rid in self.slot_request.items()}
+        slots = [slot_of[rid] for rid in request_ids]
+        B = len(slots)
+        pad = (1 << (B - 1).bit_length()) - B
+        slots_p = jnp.asarray(np.asarray(slots + slots[:1] * pad, np.int32))
+        rows = jax.device_get(snapshot_slots(self.state, slots_p))
+        qv, ids, dists, exp, vis, ext, bud = (np.asarray(r) for r in rows)
+        out = []
+        for i, (rid, slot) in enumerate(zip(request_ids, slots)):
+            out.append((rid, SlotCheckpoint(
+                query_vec=qv[i].copy(), top_ids=ids[i].copy(),
+                top_dists=dists[i].copy(), expanded=exp[i].copy(),
+                visited=vis[i].copy(), extends=int(ext[i]),
+                budget=int(bud[i]), top_k=self.slot_topk.get(slot, None))))
         return out
 
     def resume_batch(self, items) -> List[int]:

@@ -149,6 +149,11 @@ class VectorRequest:
     extends_done: int = 0  # extends already executed (stamped at eviction)
     t_preempted: Optional[float] = None
     resume_wait: float = 0.0  # total evicted time (preempt -> re-admission)
+    # failure-recovery bookkeeping (chaos / high-availability serving)
+    retries: int = 0  # from-scratch restarts after replica deaths
+    rescues: int = 0  # checkpoint-rescued resumes after replica deaths
+    hedge: bool = dataclasses.field(default=False, repr=False)  # duplicate twin
+    failed: bool = dataclasses.field(default=False, repr=False)  # retry cap hit
 
     def __post_init__(self):
         if isinstance(self.kind, RetrievalClass):
@@ -503,6 +508,37 @@ class LaneScheduler:
             self.q_edf.push(req)  # pop_by_slack boosts checkpointed items
         else:
             self.q_fifo.push_front(req)
+
+    def requeue_rescued(self, req: VectorRequest, ckpt, t_now: float):
+        """Re-queue a request rescued from a DEAD replica with its last
+        host-side checkpoint snapshot attached (same boosted-priority path
+        as a preemption re-queue). A death is not a scheduler eviction:
+        the starvation cap (``max_preemptions``) is not charged, so a
+        rescued request stays evictable for truly urgent work."""
+        self.requeue_preempted(req, ckpt, t_now)
+        req.preemptions -= 1
+        req.rescues += 1
+
+    def cancel(self, rid: int) -> Optional[VectorRequest]:
+        """Remove (and return) the queued request with ``rid`` from
+        whichever lane holds it; None when not queued here. Used by the
+        pool to cancel orphaned probes (upstream instance death) and
+        hedge losers — an in-flight request is the pool's job to evict."""
+        for lane in (self.q_edf, self.q_fifo, self.q_bg, self._shared_fifo):
+            for r in lane:
+                if r.rid == rid:
+                    lane.remove([r])
+                    return r
+        return None
+
+    def queued_requests(self) -> List[VectorRequest]:
+        """Every request currently queued on any lane (public snapshot —
+        no private reach-ins). Used by whole-shard loss recovery to scrub
+        checkpoints that reference wiped device state."""
+        out: List[VectorRequest] = []
+        for lane in (self.q_edf, self.q_fifo, self.q_bg, self._shared_fifo):
+            out.extend(lane)
+        return out
 
     def should_flush(self, t_now: float, free_slots: int, active: int) -> bool:
         """Launch/admit decision: full batch, τ_pre for urgent EDF work, the

@@ -103,6 +103,18 @@ class PoolMetrics:
     # workload-adaptive rebalancing
     rebalances: int = 0  # replicas moved cold shard → hot shard
     migrated_entries: int = 0  # cache entries re-homed between shards
+    # failure handling (chaos / high-availability serving)
+    replica_deaths: int = 0  # kill_replica fail-stops
+    shard_losses: int = 0  # whole-shard (replicas + cache segment) losses
+    rescued: int = 0  # in-flight requests resumed from a death snapshot
+    retries: int = 0  # from-scratch restarts after a replica death
+    retries_exhausted: int = 0  # requests failed at the max_retries cap
+    hedges: int = 0  # duplicate twins dispatched for stuck children
+    hedges_won: int = 0  # the twin finished first
+    hedges_wasted: int = 0  # duplicate work cancelled/dropped post-winner
+    probes_cancelled: int = 0  # requests cancelled by their upstream owner
+    cache_recovered: int = 0  # lost cache entries re-homed from backup
+    cache_lost: int = 0  # cache entries lost with a dead shard (no backup)
     # recent per-shard child admission waits (bounded window, newest last)
     shard_waits: Dict[int, List[float]] = dataclasses.field(
         default_factory=dict)
@@ -172,6 +184,10 @@ class _Replica:
         self.slowdown = 1.0  # >1 = straggling hardware
         self.quarantined = False
         self.in_flight: Dict[int, VectorRequest] = {}
+        # checkpoint-rescue (cfg.rescue_enabled): host-side SlotCheckpoint
+        # per in-flight rid, refreshed after every fused chunk — the state
+        # a kill_replica resumes from instead of restarting
+        self.snapshots: Dict[int, object] = {}
 
 
 class _Fanout:
@@ -360,24 +376,133 @@ class VectorPool:
         self._maybe_scale(t_end)
 
     def kill_replica(self, idx: int):
-        """Fail-stop: in-flight requests re-queue (at their original
-        arrival time — latency accounting keeps the failure cost)."""
+        """Fail-stop: the replica's device state is gone. Each in-flight
+        request either RESUMES from its last host-side snapshot on a
+        surviving replica (``cfg.rescue_enabled`` — the PR-2 checkpoints
+        make rescue one boosted re-queue) or restarts from scratch:
+        immediately (legacy default), or after a deadline-aware backoff
+        (``cfg.retry_backoff_ms``), up to ``cfg.max_retries`` restarts
+        after which it completes FAILED (empty results, counted) instead
+        of retrying forever. Latency accounting keeps the failure cost
+        (requests re-queue at their original arrival time)."""
         rep = self.replicas.pop(idx)
+        self.metrics.replica_deaths += 1
+        # the kill lands NOW (the pool's clock frontier), not at the
+        # victim's own clock: a straggler killed mid-chunk has already
+        # priced its slowed chunk into rep.clock, and re-queueing its
+        # orphans at that phantom chunk-end would defer recovery until
+        # the dead replica would have finished — the opposite of failing
+        # over. The victim's clock still lower-bounds nothing: it may
+        # also BE the frontier, so take the min over everyone.
+        t = min([rep.clock] + [r.clock for r in self.replicas])
         sched = self._sched_for(rep)
         for req in rep.in_flight.values():
             req.t_admitted = None
+            ckpt = rep.snapshots.get(req.rid) \
+                if self.cfg.rescue_enabled else None
+            if ckpt is not None:
+                sched.requeue_rescued(req, ckpt, t)
+                self.metrics.rescued += 1
+                continue
             # device state is gone: restart from scratch on re-admission
             req.checkpoint = None
             req.extends_done = 0
-            sched.submit(req)
+            if self.cfg.max_retries > 0 \
+                    and req.retries >= self.cfg.max_retries:
+                self.metrics.retries_exhausted += 1
+                self._fail_request(req, t)
+                continue
+            req.retries += 1
+            self.metrics.retries += 1
+            backoff = self.cfg.retry_backoff_ms / 1e3
+            if backoff > 0:
+                # deadline-aware: never sleep past half the remaining
+                # slack — a retry that out-waits its own deadline is a
+                # guaranteed miss
+                if req.deadline is not None:
+                    backoff = min(backoff, max(req.deadline - t, 0.0) * 0.5)
+                self._resubmit_at(req, t + backoff)
+            else:
+                sched.submit(req)
+
+    def _fail_request(self, req: VectorRequest, t: float):
+        """Complete a request as FAILED (empty results) — the retry cap
+        is exhausted. The request still completes exactly once; nothing
+        is silently lost."""
+        req.failed = True
+        req.result_ids = None
+        req.result_dists = None
+        req.t_completed = t
+        if req.kind == "insert":
+            self._insert_meta.pop(req.rid, None)
+        self.metrics.completed.append(req)
+
+    def _resubmit_at(self, req: VectorRequest, t: float):
+        """Re-enter the arrival heap at a future release time (death-retry
+        backoff); ``_release_pending``/``_dispatch`` take it from there."""
+        heapq.heappush(self._pending, (t, self._pending_seq, req))
+        self._pending_seq += 1
+
+    def _remove_pending(self, rid: int) -> Optional[VectorRequest]:
+        """Remove (and return) a not-yet-released request from the
+        arrival heap; None when absent."""
+        for i, (_, _, r) in enumerate(self._pending):
+            if r.rid == rid:
+                self._pending.pop(i)
+                heapq.heapify(self._pending)
+                return r
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a submitted request wherever it currently lives — the
+        arrival heap, a scheduler lane, or an engine slot (evicted, state
+        discarded). Used by the cluster when a probe's generation request
+        died upstream: nobody will consume the answer, so the pool must
+        stop burning extend budget on it. Returns True when found."""
+        found = self._remove_pending(rid) is not None
+        if not found:
+            for sched in self.schedulers:
+                if sched.cancel(rid) is not None:
+                    found = True
+                    break
+        if not found:
+            for rep in self.replicas:
+                if rid in rep.in_flight \
+                        and rid in rep.engine.slot_request.values():
+                    rep.engine.preempt([rid])  # discard the checkpoint
+                    rep.in_flight.pop(rid)
+                    rep.snapshots.pop(rid, None)
+                    found = True
+                    break
+        if found:
+            self._insert_meta.pop(rid, None)
+            self.metrics.probes_cancelled += 1
+        return found
+
+    def _maybe_hedge(self, rep: _Replica, t: float):
+        """Hedged-dispatch hook, invoked between fused chunks like
+        preemption. No-op for monolithic pools (one shared queue — a
+        duplicate would race its own twin on the same lane for nothing);
+        the sharded pool overrides it."""
+
+    def spawn_replica(self, shard: Optional[int] = None):
+        """Chaos-harness capacity restoration: bring a replacement
+        replica online after a death's downtime (monolithic pools ignore
+        ``shard`` — there is one shared index)."""
+        self.add_replica()
 
     def add_replica(self):
         """Elastic scale-up: a fresh replica over the shared index joins
-        at the clock frontier (no simulated time travel)."""
+        at the clock frontier (no simulated time travel). The frontier is
+        the MIN of the live clocks — ``run_until`` always steps the
+        min-clock replica, so that is the pool's "now"; joining at the
+        max would leave the newcomer idle until the busiest replica's
+        in-progress chunk (arbitrarily long under a straggler) drains,
+        which is exactly when a replacement is needed most."""
         self.replicas.append(_Replica(self._next_rid, self.cfg, self.index,
                                       self._use_pallas,
                                       self._seed + self._next_rid))
-        self.replicas[-1].clock = max(r.clock for r in self.replicas[:-1])
+        self.replicas[-1].clock = min(r.clock for r in self.replicas[:-1])
         self._next_rid += 1
 
     def set_slowdown(self, idx: int, factor: float):
@@ -451,6 +576,7 @@ class VectorPool:
         self._maybe_scale(t)
 
         healthy = self._healthy(rep)
+        self._maybe_hedge(rep, t)
         if healthy:
             self._maybe_rebalance(rep, t)
             self._maybe_preempt(rep, t)
@@ -490,6 +616,14 @@ class VectorPool:
             req.result_ids = ids
             req.result_dists = dists
             self._on_complete(req, rep)
+
+        if self.cfg.rescue_enabled:
+            # refresh the death-rescue snapshots: one non-destructive
+            # gather + sync per chunk. A kill can only land between
+            # chunks (nothing else advances slot state), so the snapshot
+            # IS the exact state at any failure before the next chunk
+            rep.snapshots = dict(rep.engine.snapshot(
+                sorted(rep.in_flight))) if rep.in_flight else {}
 
     def _maybe_scale(self, t_now: float):
         if not self.elastic:
@@ -549,6 +683,11 @@ class ShardedVectorPool(VectorPool):
     """
 
     MAX_SHARDS = 64  # child rid encoding: (parent_rid << 6) | shard
+    # hedge twins carry the base child rid with this bit set: a distinct
+    # rid keeps the twin out of the base child's in_flight/slot keys (and
+    # gives it a distinct engine PRNG entry key). Above every rid space
+    # (probe spaces top out at 3 << 32 + offsets).
+    HEDGE_BIT = 1 << 48
 
     def __init__(self, cfg, db, *, replicas_per_shard: Optional[int] = None,
                  policy: str = "trinity", use_pallas: Optional[bool] = None,
@@ -607,6 +746,11 @@ class ShardedVectorPool(VectorPool):
         self._shard_load = [ShardLoad() for _ in range(S)]
         self._last_move = -math.inf  # last replica reassignment
         self._last_migrate = -math.inf  # last cache-entry migration
+        # hedged dispatch: base child rid → outstanding twin rid
+        self._hedged: Dict[int, int] = {}
+        # cache-entry backup (cfg.cache_backup_enabled): gid → (vec, born)
+        # host-side peer copies a whole-shard loss re-homes from
+        self._cache_backup: Dict[int, tuple] = {}
 
     def _add_shard_replica(self, s: int) -> _Replica:
         # with rebalancing ON, every replica of a shard shares one engine
@@ -619,7 +763,10 @@ class ShardedVectorPool(VectorPool):
         rep = _Replica(self._next_rid, self.cfg, self.shards.shards[s],
                        self._use_pallas, eng_seed)
         rep.shard = s
-        rep.clock = max((r.clock for r in self.replicas), default=0.0)
+        # join at the clock frontier (min), not the busiest replica's
+        # horizon: a replacement spawned while some replica is stuck in a
+        # straggler-slowed chunk must start serving now, not after it
+        rep.clock = min((r.clock for r in self.replicas), default=0.0)
         self._next_rid += 1
         self.replicas.append(rep)
         self.peak_replicas = max(getattr(self, "peak_replicas", 0),
@@ -651,6 +798,12 @@ class ShardedVectorPool(VectorPool):
         fan-out keeps hit semantics identical to monolithic), and the
         ``nprobe_shards`` nearest centroids (0 = all) for corpus classes.
         """
+        if parent.parent_rid is not None:
+            # a death-retried CHILD released from the backoff heap: it is
+            # already shard-routed — straight back onto its shard's
+            # scheduler, never re-split
+            self.schedulers[parent.shard].submit(parent)
+            return
         rc = self.scheduler.resolve(parent)
         if parent.kind == "insert":
             targets = [self._insert_shard.pop(parent.rid)]
@@ -690,9 +843,14 @@ class ShardedVectorPool(VectorPool):
                                                 t_now=t_now)
         for gone in evicted:
             self.cache_meta.pop(gone, None)
+            self._cache_backup.pop(gone, None)
             self.metrics.cache_evictions += 1
         if meta is not None:
             self.cache_meta[gid] = meta
+        if self.cfg.cache_backup_enabled:
+            # host-side peer copy: whole-shard loss re-homes from here
+            self._cache_backup[gid] = (np.array(vec, np.float32, copy=True),
+                                       float(t_now))
         self.metrics.inserts += 1
         self._broadcast_shard(s)
         return gid
@@ -730,14 +888,35 @@ class ShardedVectorPool(VectorPool):
     def _on_complete(self, req: VectorRequest, rep: _Replica):
         """A child finished on its shard: translate local→global ids,
         fold into the parent's fan-out state, merge when all shards are
-        in."""
+        in. With hedging on, the FIRST of a base-child/twin pair to land
+        wins the shard (the loser is cancelled, or — if it completed in
+        the very same fused chunk — dropped here); each shard folds into
+        the parent EXACTLY once."""
         self.metrics.preempt_time += req.resume_wait
         s = req.shard
+        fan = self._fanout.get(req.parent_rid)
+        if fan is None or s not in fan.pending:
+            # the twin (or a racing sibling path) already resolved this
+            # shard — only reachable with hedged dispatch in play
+            assert self.cfg.hedge_enabled or req.hedge, \
+                f"orphan child completion rid={req.rid}"
+            self.metrics.hedges_wasted += 1
+            return
+        base_rid = (req.rid & ~self.HEDGE_BIT) if req.hedge else req.rid
+        twin_rid = self._hedged.pop(base_rid, None)
+        if twin_rid is not None:
+            # a pair was outstanding and THIS copy won the shard: chase
+            # down the loser (queued, in a slot, or in the backoff heap)
+            if req.hedge:
+                self.metrics.hedges_won += 1
+            loser = base_rid if req.hedge else twin_rid
+            if self._cancel_child(loser, s):
+                self.metrics.hedges_wasted += 1
+            # else: the loser completed in this same fused chunk — its
+            # materialized completion hits the drop branch above
         waits = self.metrics.shard_waits.setdefault(s, [])
         waits.append(req.wait)
         del waits[:-256]  # bounded window: recent waits only
-        fan = self._fanout.pop(req.parent_rid, None)
-        assert fan is not None, f"orphan child completion rid={req.rid}"
         parent = fan.parent
         if req.kind == "insert":
             # single child; its shard-local result IS the neighbor list
@@ -755,14 +934,54 @@ class ShardedVectorPool(VectorPool):
                               else min(fan.t_admitted, req.t_admitted))
         fan.pending.discard(s)
         if fan.pending:
-            self._fanout[req.parent_rid] = fan
             return
+        self._fanout.pop(req.parent_rid)
         self._finalize(fan)
+
+    def _fail_request(self, req: VectorRequest, t: float):
+        """Child retry-cap exhaustion. If the child's hedge twin is still
+        outstanding (or THIS is the twin and the base child lives on),
+        the shard stays pending — the survivor carries it. Otherwise the
+        whole parent completes FAILED exactly once: the shard is resolved
+        with no results and the parent is poisoned so ``_finalize``
+        discards any partial merges."""
+        if req.parent_rid is None:
+            super()._fail_request(req, t)
+            return
+        fan = self._fanout.get(req.parent_rid)
+        if fan is None or req.shard not in fan.pending:
+            return  # shard already resolved by the twin: drop quietly
+        base_rid = (req.rid & ~self.HEDGE_BIT) if req.hedge else req.rid
+        if self._hedged.pop(base_rid, None) is not None:
+            # the OTHER copy of the pair is still live: it becomes the
+            # shard's sole owner (the popped mapping tells a later
+            # failure of that copy that nobody is left to carry it)
+            return
+        parent = fan.parent
+        parent.failed = True
+        fan.t_done = max(fan.t_done, t)
+        fan.pending.discard(req.shard)
+        if not fan.pending:
+            self._fanout.pop(req.parent_rid)
+            self._finalize(fan)
 
     def _finalize(self, fan: _Fanout):
         from repro.kernels.ops import merge_partial_topk
 
         parent = fan.parent
+        if parent.failed:
+            # some child exhausted its retry cap: the logical request
+            # completes FAILED (empty results) — never silently lost,
+            # never served a partial merge as if it were complete
+            parent.result_ids = None
+            parent.result_dists = None
+            parent.t_completed = fan.t_done
+            parent.extends_used = fan.extends
+            parent.t_admitted = fan.t_admitted
+            if parent.kind == "insert":
+                self._insert_meta.pop(parent.rid, None)
+            self.metrics.completed.append(parent)
+            return
         if fan.ids:
             k = max(len(a) for a in fan.ids)
             S_t = len(fan.ids)
@@ -780,6 +999,79 @@ class ShardedVectorPool(VectorPool):
         parent.extends_used = fan.extends
         parent.t_admitted = fan.t_admitted  # earliest child seating (wait)
         self.metrics.completed.append(parent)
+
+    # ----------------------------------------------------- hedged dispatch
+    def _cancel_child(self, rid: int, s: int) -> bool:
+        """Evict the losing copy of a hedged pair from wherever it lives:
+        shard ``s``'s scheduler lanes, the death-retry backoff heap, or
+        an engine slot. False when it is nowhere to be found — i.e. its
+        completion already materialized in the same fused chunk (the
+        winner's drop branch absorbs it)."""
+        if self.schedulers[s].cancel(rid) is not None:
+            return True
+        if self._remove_pending(rid) is not None:
+            return True
+        for rep in self.shard_replicas(s):
+            if rid in rep.in_flight \
+                    and rid in rep.engine.slot_request.values():
+                rep.engine.preempt([rid])  # discard the checkpoint
+                rep.in_flight.pop(rid)
+                rep.snapshots.pop(rid, None)
+                return True
+        return False
+
+    def _maybe_hedge(self, rep: _Replica, t: float):
+        """Hedged duplicate dispatch (``cfg.hedge_enabled``): a child
+        stuck in a slot well past its expected service time — or seated
+        on a quarantined straggler — gets a TWIN submitted to the same
+        shard's scheduler for another replica to pick up. First copy to
+        finish wins the shard; the loser is cancelled (or dropped on
+        materialization). At most one twin per child, never for inserts
+        (insert completion applies side effects — a duplicate would
+        double-apply)."""
+        cfg = self.cfg
+        if not cfg.hedge_enabled:
+            return
+        for prid, fan in list(self._fanout.items()):
+            if fan.parent.kind == "insert" \
+                    or fan.parent.rclass is not None \
+                    and fan.parent.rclass.lane == "background":
+                continue
+            for s in list(fan.pending):
+                crid = self._child_rid(prid, s)
+                if crid in self._hedged:
+                    continue  # one twin max per child
+                host = child = None
+                for r in self.shard_replicas(s):
+                    c = r.in_flight.get(crid)
+                    if c is not None and c.t_admitted is not None:
+                        host, child = r, c
+                        break
+                if child is None or child.hedge:
+                    continue  # queued/backoff (not stuck in a slot)
+                peers = [r for r in self.shard_replicas(s)
+                         if r is not host and not r.quarantined]
+                if not peers:
+                    continue  # a twin would land back on the straggler
+                # baseline from the pool-wide MEDIAN per-replica extend
+                # latency, not the shard scheduler's EWMA: a straggler
+                # feeds its own inflated chunk times into the shard EWMA,
+                # which would grow the hedge threshold with the very
+                # slowdown it is meant to catch
+                med = float(np.median(
+                    [r.ext_latency_ewma for r in self.replicas]))
+                expect = max(child.est_extends, 1.0) * max(med, 1e-9)
+                if not (host.quarantined
+                        or t - child.t_admitted > cfg.hedge_factor * expect):
+                    continue
+                twin = VectorRequest(
+                    crid | self.HEDGE_BIT, child.rclass or child.kind,
+                    child.qvec, child.t_arrival, child.deadline,
+                    est_extends=child.est_extends, parent_rid=prid, shard=s)
+                twin.hedge = True
+                self._hedged[crid] = twin.rid
+                self.schedulers[s].submit(twin)
+                self.metrics.hedges += 1
 
     # --------------------------------------------------------- membership
     def _born_at(self, row: int) -> Optional[float]:
@@ -822,6 +1114,89 @@ class ShardedVectorPool(VectorPool):
     def add_replica(self):  # pragma: no cover - guarded by elastic=False
         raise NotImplementedError(
             "sharded pools add replicas per shard (_add_shard_replica)")
+
+    def spawn_replica(self, shard: Optional[int] = None):
+        assert shard is not None, "sharded pools spawn replicas per shard"
+        self._add_shard_replica(shard)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a logical request: tear down its whole fan-out — every
+        pending child AND its hedge twin — wherever each copy lives."""
+        req = self._remove_pending(rid)
+        if req is not None:  # not yet split into children
+            if req.kind == "insert":
+                self._insert_shard.pop(rid, None)
+                self._insert_meta.pop(rid, None)
+            self.metrics.probes_cancelled += 1
+            return True
+        fan = self._fanout.pop(rid, None)
+        if fan is None:
+            return False
+        for s in fan.pending:
+            crid = self._child_rid(rid, s)
+            self._cancel_child(crid, s)
+            twin_rid = self._hedged.pop(crid, None)
+            if twin_rid is not None:
+                self._cancel_child(twin_rid, s)
+        if fan.parent.kind == "insert":
+            self._insert_meta.pop(rid, None)
+        self.metrics.probes_cancelled += 1
+        return True
+
+    def lose_shard(self, s: int):
+        """Catastrophic whole-shard failure: every replica of shard ``s``
+        dies at once and the shard's answer-cache segment is wiped. The
+        shard itself is immediately re-homed on a fresh replica (the
+        frozen corpus rows rebuild from the host-side partition), but its
+        cache entries are device state: without backups they are LOST
+        (repeat prompts miss again, counted ``cache_lost``); with
+        ``cfg.cache_backup_enabled`` the pool re-homes every lost entry
+        from its host-side peer copy onto the least-loaded surviving
+        shard (``cache_recovered``), preserving gids, answer metadata and
+        insert timestamps — staleness guards keep working."""
+        self.metrics.shard_losses += 1
+        victims = self.shard_replicas(s)
+        # loss time = clock frontier (see kill_replica): a victim stuck
+        # mid-chunk must not push recovery to its phantom chunk end
+        t = min((r.clock for r in self.replicas), default=0.0)
+        # device snapshots AND queued checkpoints reference the wiped
+        # cache rows — a resume over swapped arrays would return
+        # distances against the WRONG vectors. Scrub both: every rescue
+        # path restarts from scratch instead.
+        for rep in victims:
+            rep.snapshots = {}
+        for req in self.schedulers[s].queued_requests():
+            if req.checkpoint is not None:
+                req.checkpoint = None
+                req.extends_done = 0
+        lost = self.shards.drop_shard_cache(s)
+        # kill by identity: kill_replica auto-re-homes a fresh replica
+        # when the shard empties, and that replacement must survive
+        for rep in victims:
+            self.kill_replica(self.replicas.index(rep))
+        for gid in list(lost):
+            if not self.cfg.cache_backup_enabled \
+                    or gid not in self._cache_backup:
+                self.cache_meta.pop(gid, None)
+                self._cache_backup.pop(gid, None)
+                self.metrics.cache_lost += 1
+                lost.remove(gid)
+        if not lost:
+            return
+        # re-home the backed-up entries onto the least-occupied OTHER
+        # shard (sole-shard pools re-home in place: the segment rebuilds)
+        cands = [d for d in range(self.shards.num_shards) if d != s] or [s]
+        dst = min(cands, key=lambda d: (self.shards.shards[d].cache_size, d))
+        vecs = np.stack([self._cache_backup[g][0] for g in lost])
+        born = [self._cache_backup[g][1] for g in lost]
+        evicted = self.shards.restore_entries(dst, lost, vecs, born, t_now=t)
+        for gone in evicted:
+            self.cache_meta.pop(gone, None)
+            self._cache_backup.pop(gone, None)
+            self.metrics.cache_evictions += 1
+        self.metrics.cache_recovered += len(lost)
+        self._broadcast_shard(dst)
+        self._ensure_cache_replication(dst)
 
     # ------------------------------------------- workload-adaptive rebalance
     def shard_load_score(self, s: int, t: float) -> float:
@@ -974,6 +1349,7 @@ class ShardedVectorPool(VectorPool):
                                                      t_now=t)
         for gone in evicted:
             self.cache_meta.pop(gone, None)
+            self._cache_backup.pop(gone, None)
             self.metrics.cache_evictions += 1
         # the donor's arrays changed even when nothing moved (extraction
         # TTL-tombstones expired rows) — its replicas must see the swap

@@ -403,13 +403,39 @@ class ClusterSim:
         self.metrics.pool_migrations = pm.migrated_entries
         self.metrics.pool_shard_p95_wait = {
             s: pm.shard_p95_wait(s) for s in sorted(pm.shard_waits)}
+        # failure-recovery counters (chaos / high-availability serving).
+        # probes_cancelled adds the pool's own count (hedge losers are
+        # counted separately as hedges_wasted) to cluster-side teardowns.
+        self.metrics.pool_replica_deaths = pm.replica_deaths
+        self.metrics.pool_shard_losses = pm.shard_losses
+        self.metrics.pool_shard_reassignments = pm.shard_reassignments
+        self.metrics.pool_rescued = pm.rescued
+        self.metrics.pool_retries = pm.retries
+        self.metrics.pool_retries_exhausted = pm.retries_exhausted
+        self.metrics.pool_hedges = pm.hedges
+        self.metrics.pool_hedges_won = pm.hedges_won
+        self.metrics.pool_hedges_wasted = pm.hedges_wasted
+        self.metrics.probes_cancelled = pm.probes_cancelled
+        self.metrics.cache_entries_recovered = pm.cache_recovered
+        self.metrics.cache_entries_lost = pm.cache_lost
 
     # ----------------------------------------------------------- failures
+    def _cancel_probes(self, req: GenRequest):
+        """Tear down every in-flight vector-pool probe issued for ``req``:
+        its instance died, nobody will consume the answers, and leaked
+        probes burn extend budget competing against live traffic. (The
+        re-prefill path re-issues what the retry actually needs.)"""
+        for rid in [r for r, (g, _, _) in self._probe_cb.items() if g is req]:
+            self._probe_cb.pop(rid)
+            self.vector_pool.cancel(rid)
+
     def kill_prefill(self, idx: int):
         def _kill(inst=self.prefill_pool[idx]):
             inst.health.alive = False
+            self.metrics.prefill_deaths += 1
             for req in inst.current:
                 req.re_prefills += 1
+                self._cancel_probes(req)
                 self.prefill_queue.appendleft(req)
             inst.current = []
             self._try_start_prefill()
@@ -418,18 +444,41 @@ class ClusterSim:
     def kill_decode(self, idx: int):
         def _kill(inst=self.decode_pool[idx]):
             inst.health.alive = False
+            self.metrics.decode_deaths += 1
             for req in list(inst.active.values()):
                 inst.release(req)
                 req.re_prefills += 1
                 req.stalled_until = 0.0
+                self._cancel_probes(req)
                 self.prefill_queue.append(req)  # device KV lost: re-prefill
             self._try_start_prefill()
         return _kill
+
+    def revive_prefill(self, idx: int):
+        """Bring a killed prefill instance back (chaos downtime expiry)."""
+        def _revive(inst=self.prefill_pool[idx]):
+            inst.health.alive = True
+            self._try_start_prefill()
+        return _revive
+
+    def revive_decode(self, idx: int):
+        """Bring a killed decode instance back (chaos downtime expiry)."""
+        def _revive(inst=self.decode_pool[idx]):
+            inst.health.alive = True
+            self._try_admit_decode()
+        return _revive
 
     def set_decode_slowdown(self, idx: int, factor: float):
         def _slow(inst=self.decode_pool[idx]):
             inst.health.slowdown = factor
         return _slow
+
+    def set_kv_bandwidth(self, factor: float):
+        """Scale the prefill→decode KV link bandwidth by ``factor``
+        (transient link degradation; factor > 1 restores)."""
+        def _set():
+            self.kv_link.bandwidth *= factor
+        return _set
 
 
 def make_sharded_pool_sim(model_cfg=None, *, num_vectors: int = 6000,

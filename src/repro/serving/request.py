@@ -67,6 +67,21 @@ class ClusterMetrics:
     pool_migrations: int = 0  # cache entries re-homed between shards
     pool_shard_p95_wait: Dict[int, float] = dataclasses.field(
         default_factory=dict)  # per-shard recent child wait p95
+    # failure injection / high-availability serving (stamped by ClusterSim)
+    prefill_deaths: int = 0  # prefill instances fail-stopped
+    decode_deaths: int = 0  # decode instances fail-stopped
+    probes_cancelled: int = 0  # orphaned pool probes torn down on death
+    pool_replica_deaths: int = 0
+    pool_shard_losses: int = 0  # whole cache-holding shards lost
+    pool_shard_reassignments: int = 0  # orphaned shards re-homed
+    pool_rescued: int = 0  # in-flight probes resumed from snapshots
+    pool_retries: int = 0  # probes restarted from scratch after a death
+    pool_retries_exhausted: int = 0  # probes that hit the retry cap
+    pool_hedges: int = 0  # duplicate twins dispatched
+    pool_hedges_won: int = 0  # twins that beat the original
+    pool_hedges_wasted: int = 0  # losing copies cancelled/dropped
+    cache_entries_recovered: int = 0  # re-homed from backup on shard loss
+    cache_entries_lost: int = 0  # unrecoverable (no backup copy)
 
     def summary(self, t_elapsed: float) -> dict:
         fin = self.finished
@@ -88,6 +103,20 @@ class ClusterMetrics:
             "tpot_p95": percentile([r.tpot for r in fin], 95),
             "decode_stall_frac": stall / max(decode_time, 1e-9),
             "re_prefills": sum(r.re_prefills for r in fin),
+            "prefill_deaths": self.prefill_deaths,
+            "decode_deaths": self.decode_deaths,
+            "probes_cancelled": self.probes_cancelled,
+            "pool_replica_deaths": self.pool_replica_deaths,
+            "pool_shard_losses": self.pool_shard_losses,
+            "pool_shard_reassignments": self.pool_shard_reassignments,
+            "pool_rescued": self.pool_rescued,
+            "pool_retries": self.pool_retries,
+            "pool_retries_exhausted": self.pool_retries_exhausted,
+            "pool_hedges": self.pool_hedges,
+            "pool_hedges_won": self.pool_hedges_won,
+            "pool_hedges_wasted": self.pool_hedges_wasted,
+            "cache_entries_recovered": self.cache_entries_recovered,
+            "cache_entries_lost": self.cache_entries_lost,
             "pool_preemptions": self.pool_preemptions,
             "pool_resumes": self.pool_resumes,
             "pool_rebalances": self.pool_rebalances,

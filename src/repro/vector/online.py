@@ -306,6 +306,17 @@ class OnlineIndex:
                 order = np.argsort(self._t_insert[live], kind="stable")
                 self._evict_locals(live[order][:over].tolist())
 
+    def wipe_cache(self) -> None:
+        """Catastrophic loss of the whole cache segment (chaos harness:
+        a cache-holding shard's devices die and the segment is rebuilt
+        empty). Every live entry is tombstoned through the normal eviction
+        path — db pushed far, adjacency cleared, incoming edges cut, slots
+        freed — so the frozen corpus keeps serving untouched and the lost
+        rows land in ``drain_evicted()`` for the caller to retire (or
+        re-home from backup)."""
+        live = np.flatnonzero(self._live[:self.cache_rows])
+        self._evict_locals(live.tolist())
+
     # ------------------------------------------------------- migration
     def extract_entries(self, n: int, t_now: float = 0.0):
         """Remove up to ``n`` of the OLDEST live cache entries for

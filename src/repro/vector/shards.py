@@ -278,6 +278,56 @@ class ShardedIndex:
             self._gid_loc[gid] = (dst, int(r))
         return moved_gids, evicted
 
+    # ------------------------------------------------------ shard loss
+    def drop_shard_cache(self, s: int) -> List[int]:
+        """Whole-shard cache loss (chaos harness): tombstone every live
+        cache entry of shard ``s`` and retire their gids. The frozen
+        corpus segment is untouched (it rebuilds bit-identically from the
+        durable corpus); only the online-inserted cache entries die with
+        the shard. Returns the lost gids so the pool can either drop
+        their answer metadata (knobs-off degradation) or re-home them
+        from replicated copies (:meth:`restore_entries`)."""
+        shard = self.shards[s]
+        shard.wipe_cache()
+        lost: List[int] = []
+        gmap = self._global_of[s]
+        for loc in shard.drain_evicted():
+            if loc < len(gmap) and gmap[loc] >= 0:
+                gid = int(gmap[loc])
+                lost.append(gid)
+                self._gid_loc.pop(gid, None)
+                gmap[loc] = -1
+        return lost
+
+    def restore_entries(self, dst: int, gids: Sequence[int],
+                        vecs: np.ndarray, born: Sequence[float],
+                        t_now: float = 0.0) -> List[int]:
+        """Re-home lost cache entries onto shard ``dst`` with their
+        ORIGINAL gids and insert timestamps (disaster recovery from
+        replicated peer copies — the adoption half of a migration, minus
+        the donor extraction which the failure already performed).
+        Returns gids genuinely evicted by the recipient's own capacity/
+        TTL pass during adoption."""
+        recip = self.shards[dst]
+        nbr_lists = self._exact_cache_neighbors(recip, vecs)
+        new_rows = recip.adopt_entries(np.asarray(vecs, np.float32),
+                                       np.asarray(born, np.float64),
+                                       nbr_lists, t_now=t_now)
+        evicted: List[int] = []
+        gmap = self._global_of[dst]
+        for loc in recip.drain_evicted():
+            if loc < len(gmap) and gmap[loc] >= 0:
+                gid = int(gmap[loc])
+                evicted.append(gid)
+                self._gid_loc.pop(gid, None)
+                gmap[loc] = -1
+        self._ensure_map(dst, max(new_rows) + 1)
+        dst_map = self._global_of[dst]
+        for gid, r in zip(gids, new_rows):
+            dst_map[r] = int(gid)
+            self._gid_loc[int(gid)] = (dst, int(r))
+        return evicted
+
     @staticmethod
     def _exact_cache_neighbors(recip: OnlineIndex, vecs: np.ndarray):
         """Exact nearest LIVE cache rows of ``recip`` per migrated vector

@@ -1,0 +1,425 @@
+"""Chaos harness + high-availability serving (serving/chaos.py, recovery
+knobs in core/trinity_pool.py): deterministic fault schedules, exactly-once
+completion under replica/instance kills, checkpoint-rescue bit-identity,
+hedged dispatch dedup, cache-loss recovery, retry caps/backoff, and
+orphaned-probe cancellation."""
+import numpy as np
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import ShardedVectorPool
+from repro.serving.chaos import (ChaosInjector, FaultEvent, make_schedule)
+from repro.vector.dataset import make_dataset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(3000, 32, num_clusters=16, num_queries=64,
+                               seed=1)
+    return db, queries
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=3000, dim=32, graph_degree=16, max_requests=16,
+                top_m=32, parents_per_step=2, task_batch=2048,
+                visited_slots=512, top_k=10, semantic_cache_enabled=True,
+                cache_capacity=64, num_shards=4)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+def _submit_burst(pool, queries, n, t0=0.0, gap=1e-4, deadline=0.05):
+    t = t0
+    for i in range(n):
+        pool.submit(VectorRequest(i, "prefill", queries[i], t, t + deadline))
+        t += gap
+    return t
+
+
+def _completed_exactly_once(pool, n):
+    rids = [r.rid for r in pool.metrics.completed]
+    assert sorted(rids) == list(range(n)), \
+        f"lost={set(range(n)) - set(rids)} dup={len(rids) - len(set(rids))}"
+
+
+# ---------------------------------------------------------------------------
+# deterministic schedules
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_is_deterministic_and_kind_independent():
+    rates = {"kill_replica": 5.0, "straggle_replica": 3.0, "kv_degrade": 2.0}
+    a = make_schedule(7, 0.0, 4.0, rates)
+    assert a == make_schedule(7, 0.0, 4.0, rates)  # replayable
+    assert a != make_schedule(8, 0.0, 4.0, rates)  # seed matters
+    assert a and all(0.0 <= e.t < 4.0 for e in a)
+    assert [e.t for e in a] == sorted(e.t for e in a)
+    # per-kind independence: adding a kind never perturbs the others
+    b = make_schedule(7, 0.0, 4.0, {**rates, "kill_decode": 1.0})
+    assert [e for e in b if e.kind != "kill_decode"] == a
+    # straggle/degrade events carry the slowdown, kills the downtime
+    assert all(e.factor > 1 for e in a if e.kind != "kill_replica")
+    assert all(e.factor == 1 for e in a if e.kind == "kill_replica")
+
+
+def test_schedule_rejects_unknown_kind():
+    with pytest.raises(AssertionError):
+        make_schedule(0, 0.0, 1.0, {"set_on_fire": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# exactly-once completion under injected faults
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_replica_kills_mid_burst_no_loss_no_dup(setup):
+    """Seeded kill_replica + straggler schedule against a live burst:
+    every logical request completes exactly once, and downtime respawns
+    restore the replica count."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    n_reps = len(pool.replicas)
+    t_last = _submit_burst(pool, queries, 48)
+    sched = make_schedule(3, 5e-4, t_last + 0.02,
+                          {"kill_replica": 400.0, "straggle_replica": 200.0},
+                          slow_duration=2e-3, downtime=2e-3)
+    assert len(sched) >= 3
+    inj = ChaosInjector(sched, seed=3)
+    inj.run_pool(pool, t_last + 1.0)
+    assert inj.injected >= 3
+    assert len(inj.log) == len(sched)  # every event logged
+    assert pool.metrics.replica_deaths >= 1
+    _completed_exactly_once(pool, 48)
+    assert len(pool.replicas) == n_reps  # respawns restored capacity
+
+
+def test_chaos_pool_skips_impossible_faults(setup):
+    """lose_shard against a monolithic pool and killing a monolithic
+    pool's last replica are skipped (logged, not applied), never crash."""
+    from repro.core.trinity_pool import VectorPool
+    from repro.vector.graph import make_cagra_graph
+    db, queries = setup
+    cfg = _cfg(num_shards=1, semantic_cache_enabled=False)
+    pool = VectorPool(cfg, db, make_cagra_graph(db, 16, seed=1),
+                      replicas=1, use_pallas=False)
+    _submit_burst(pool, queries, 4)
+    inj = ChaosInjector([FaultEvent(1e-4, "lose_shard"),
+                         FaultEvent(2e-4, "kill_replica")], seed=0)
+    inj.run_pool(pool, 1.0)
+    assert inj.injected == 0
+    assert [e["applied"] for e in inj.log] == [False, False]
+    _completed_exactly_once(pool, 4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rescue
+# ---------------------------------------------------------------------------
+
+
+def test_rescued_children_bit_identical_to_uninterrupted(setup):
+    """rescue_enabled + shared per-shard engine seeds: a mid-burst kill
+    rescues every in-flight child from its last snapshot, and ALL final
+    results (ids and distances) are bit-identical to an uninterrupted
+    run of the same workload."""
+    db, queries = setup
+    kw = dict(rebalance_enabled=True, rescue_enabled=True)
+    ref = ShardedVectorPool(_cfg(**kw), db, seed=0)
+    t_last = _submit_burst(ref, queries, 24)
+    ref.run_until(t_last + 1.0)
+    _completed_exactly_once(ref, 24)
+
+    pool = ShardedVectorPool(_cfg(**kw), db, seed=0)
+    _submit_burst(pool, queries, 24)
+    pool.run_until(8e-4)  # mid-burst: work is in flight
+    victim = max(range(len(pool.replicas)),
+                 key=lambda i: len(pool.replicas[i].in_flight))
+    assert pool.replicas[victim].in_flight
+    pool.kill_replica(victim)
+    assert pool.metrics.rescued >= 1
+    assert pool.metrics.retries == 0  # every in-flight child had a snapshot
+    pool.run_until(t_last + 1.0)
+    _completed_exactly_once(pool, 24)
+
+    want = {r.rid: r for r in ref.metrics.completed}
+    for r in pool.metrics.completed:
+        np.testing.assert_array_equal(r.result_ids, want[r.rid].result_ids)
+        np.testing.assert_array_equal(r.result_dists,
+                                      want[r.rid].result_dists)
+        assert r.extends_used == want[r.rid].extends_used
+
+
+# ---------------------------------------------------------------------------
+# hedged dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_hedged_dispatch_exactly_once(setup):
+    """A hard straggler strands children in its slots; hedging dispatches
+    twins to the healthy peer, the first copy wins, and every logical
+    request still completes exactly once."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(hedge_enabled=True, hedge_factor=4.0),
+                             db, replicas_per_shard=2, seed=0)
+    pool.set_slowdown(0, 200.0)  # shard 0's first replica crawls
+    t_last = _submit_burst(pool, queries, 32)
+    pool.run_until(t_last + 2.0)
+    m = pool.metrics
+    assert m.hedges >= 1
+    assert m.hedges_won >= 1  # a twin beat the straggler's copy
+    assert m.hedges_won + m.hedges_wasted <= 2 * m.hedges
+    _completed_exactly_once(pool, 32)
+
+
+def test_hedge_knob_off_never_hedges(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, replicas_per_shard=2, seed=0)
+    pool.set_slowdown(0, 200.0)
+    t_last = _submit_burst(pool, queries, 16)
+    pool.run_until(t_last + 2.0)
+    assert pool.metrics.hedges == 0
+    _completed_exactly_once(pool, 16)
+
+
+# ---------------------------------------------------------------------------
+# whole-shard loss + cache recovery
+# ---------------------------------------------------------------------------
+
+
+def _fill_cache(pool, db, k=6):
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(k):
+        vec = (db[7] + rng.normal(0, 0.01, db.shape[1])).astype(np.float32)
+        pool.submit_insert(vec, meta={"tokens": i}, t_now=t)
+        t += 5e-4
+        pool.run_until(t)
+    pool.run_until(t + 0.5)
+    assert pool.metrics.inserts == k
+    return t + 0.5
+
+
+def test_shard_loss_with_backup_rehomes_entries(setup):
+    db, _ = setup
+    pool = ShardedVectorPool(_cfg(cache_backup_enabled=True), db, seed=0)
+    t = _fill_cache(pool, db, k=6)
+    gids = sorted(pool.cache_meta)
+    s = pool.shards.cache_shards()[0]
+    pool.lose_shard(s)
+    assert pool.metrics.shard_losses == 1
+    assert pool.metrics.cache_recovered == 6
+    assert pool.metrics.cache_lost == 0
+    assert sorted(pool.cache_meta) == gids  # metadata survived, gids stable
+    # repeat lookups still hit under the ORIGINAL global ids
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        vec = (db[7] + rng.normal(0, 0.01, db.shape[1])).astype(np.float32)
+        pool.submit(VectorRequest(1000 + i, "cache_lookup", vec, t, t + 0.05))
+        t += 1e-3
+    pool.run_until(t + 1.0)
+    done = {r.rid: r for r in pool.metrics.completed
+            if 1000 <= r.rid < 2000}
+    assert len(done) == 6
+    for i in range(6):
+        hit = int(done[1000 + i].result_ids[0])
+        assert hit in gids
+        assert pool.meta_at(hit, t) is not None
+
+
+def test_shard_loss_without_backup_loses_entries(setup):
+    db, _ = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t = _fill_cache(pool, db, k=6)
+    s = pool.shards.cache_shards()[0]
+    pool.lose_shard(s)
+    assert pool.metrics.cache_lost == 6
+    assert pool.metrics.cache_recovered == 0
+    assert not pool.cache_meta  # nothing left to serve
+    pool.submit(VectorRequest(999, "cache_lookup", db[7], t, t + 0.05))
+    pool.run_until(t + 1.0)
+    done = {r.rid: r for r in pool.metrics.completed if r.rid == 999}
+    assert done[999].result_ids is None  # immediate miss: cache is gone
+
+
+# ---------------------------------------------------------------------------
+# retry cap + backoff
+# ---------------------------------------------------------------------------
+
+
+def _run_until_in_flight(pool):
+    """Advance in small steps until the sole replica holds in-flight work
+    (a 50× straggler keeps a seated child there for many milliseconds)."""
+    pool.set_slowdown(0, 50.0)
+    t = pool.replicas[0].clock
+    while not pool.replicas[0].in_flight:
+        t += 2e-4
+        assert t < 1.0, "probe never seated"
+        pool.run_until(t)
+
+
+def test_retry_cap_completes_failed_exactly_once(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(num_shards=1, max_retries=1), db,
+                             replicas_per_shard=1, seed=0)
+    pool.submit(VectorRequest(0, "prefill", queries[0], 0.0, 10.0))
+    _run_until_in_flight(pool)
+    pool.kill_replica(0)  # retry 1/1 (re-homed on a fresh replica)
+    assert pool.metrics.retries == 1
+    _run_until_in_flight(pool)
+    pool.kill_replica(0)  # cap hit: completes FAILED, exactly once
+    assert pool.metrics.retries_exhausted == 1
+    pool.set_slowdown(0, 1.0)
+    pool.run_until(pool.replicas[0].clock + 1.0)
+    done = pool.metrics.completed
+    assert len(done) == 1 and done[0].rid == 0
+    assert done[0].failed and done[0].result_ids is None
+
+
+def test_retry_backoff_delays_resubmission(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(num_shards=1, retry_backoff_ms=5.0), db,
+                             replicas_per_shard=1, seed=0)
+    pool.submit(VectorRequest(0, "prefill", queries[0], 0.0, 10.0))
+    _run_until_in_flight(pool)
+    t_kill = pool.replicas[0].clock
+    pool.kill_replica(0)
+    # the retried child sits in the arrival heap until the backoff expires
+    assert len(pool._pending) == 1
+    t_release = pool._pending[0][0]
+    assert t_release == pytest.approx(t_kill + 5e-3)
+    pool.set_slowdown(0, 1.0)
+    pool.run_until(t_release + 1.0)
+    _completed_exactly_once(pool, 1)
+    assert not pool.metrics.completed[0].failed
+
+
+# ---------------------------------------------------------------------------
+# cluster: orphaned probes + instance kills
+# ---------------------------------------------------------------------------
+
+
+def _mk_sim(setup, **kw):
+    from repro.configs import get_smoke_config
+    from repro.serving.cluster import ClusterSim
+    from repro.vector.graph import make_cagra_graph
+    db, _ = setup
+    cfg = _cfg(num_shards=1, dim=32)
+    graph = make_cagra_graph(db, 16, seed=1)
+    model_cfg = get_smoke_config("phi3-medium-14b")
+    defaults = dict(placement="disaggregated", policy="trinity",
+                    n_prefill=2, n_decode=2, decode_batch=8)
+    defaults.update(kw)
+    # monolithic pool keeps this fast; cancel() is pool-agnostic
+    cfg = _cfg(num_shards=1)
+    from repro.core.trinity_pool import VectorPool  # noqa: F401
+    return ClusterSim(model_cfg, cfg, db, graph, **defaults)
+
+
+def test_cancel_probes_tears_down_orphans(setup):
+    """Regression for the orphaned-probe leak: an instance death must
+    cancel the victim's in-flight vector-pool probes (they competed
+    against live traffic for extend budget with nobody left to consume
+    the answer)."""
+    from repro.serving.request import GenRequest
+    sim = _mk_sim(setup)
+    req = GenRequest(5, prompt_len=128, max_new_tokens=8, t_arrival=0.0)
+    sim._submit_probe(req, "prefill", lambda r, v: None)
+    other = GenRequest(6, prompt_len=128, max_new_tokens=8, t_arrival=0.0)
+    sim._submit_probe(other, "prefill", lambda r, v: None)
+    assert len(sim._probe_cb) == 2
+    sim._cancel_probes(req)
+    assert len(sim._probe_cb) == 1  # the other request's probe survives
+    assert sim.vector_pool.metrics.probes_cancelled == 1
+    sim.vector_pool.run_until(1.0)
+    done = [r.rid for r in sim.vector_pool.metrics.completed]
+    assert len(done) == 1  # the cancelled probe never completes
+
+
+@pytest.mark.slow
+def test_kill_decode_mid_burst_cancels_probes_and_finishes(setup):
+    from repro.serving.request import GenRequest
+    sim = _mk_sim(setup, n_decode=3)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(16):
+        t += float(rng.exponential(0.004))
+        sim.arrive(GenRequest(i, prompt_len=int(rng.integers(64, 512)),
+                              max_new_tokens=16, t_arrival=t,
+                              rag_interval=4))
+    # kill the first decode instance seen holding a request with an
+    # in-flight pool probe — the exact shape of the orphaned-probe leak
+    killed = []
+
+    def _kill_when_probed():
+        if not killed:
+            for _, (greq, _, _) in sim._probe_cb.items():
+                for idx, inst in enumerate(sim.decode_pool):
+                    if inst.health.alive and greq in inst.active.values():
+                        killed.append(idx)
+                        sim.kill_decode(idx)()
+                        return
+            sim.schedule(sim.t_now + 5e-4, _kill_when_probed)
+    sim.schedule(t * 0.2, _kill_when_probed)
+    sim.run(t + 10.0)
+    s = sim.metrics.summary(t + 10.0)
+    assert killed, "no decode instance ever held a probed request"
+    assert s["requests"] == 16  # no request lost
+    rids = [r.rid for r in sim.metrics.finished]
+    assert len(rids) == len(set(rids))  # none answered twice
+    assert s["decode_deaths"] == 1
+    # the victim had decode-RAG probes in flight: the kill tore them down
+    assert s["probes_cancelled"] >= 1
+
+
+@pytest.mark.slow
+def test_kill_prefill_mid_burst_no_loss(setup):
+    from repro.serving.request import GenRequest
+    sim = _mk_sim(setup, n_prefill=2)
+    rng = np.random.default_rng(1)
+    t = 0.0
+    for i in range(12):
+        t += float(rng.exponential(0.003))
+        sim.arrive(GenRequest(i, prompt_len=int(rng.integers(64, 512)),
+                              max_new_tokens=12, t_arrival=t,
+                              rag_interval=8))
+    sim.schedule(2e-3, sim.kill_prefill(0))
+    sim.schedule(0.5, sim.revive_prefill(0))
+    sim.run(t + 10.0)
+    s = sim.metrics.summary(t + 10.0)
+    assert s["requests"] == 12
+    rids = [r.rid for r in sim.metrics.finished]
+    assert len(rids) == len(set(rids))
+    assert s["prefill_deaths"] == 1
+    assert sim.prefill_pool[0].health.alive  # revived after downtime
+
+
+@pytest.mark.slow
+def test_cluster_chaos_schedule_end_to_end(setup):
+    """Armed injector on the sim's own event heap: kills, decode
+    stragglers and KV-link degradation fire at their scheduled times;
+    every request finishes exactly once and the link bandwidth is
+    restored after each degradation window."""
+    from repro.serving.request import GenRequest
+    sim = _mk_sim(setup, n_decode=3)
+    bw0 = sim.kv_link.bandwidth
+    rng = np.random.default_rng(2)
+    t = 0.0
+    for i in range(16):
+        t += float(rng.exponential(0.004))
+        sim.arrive(GenRequest(i, prompt_len=int(rng.integers(64, 512)),
+                              max_new_tokens=16, t_arrival=t,
+                              rag_interval=4))
+    sched = make_schedule(11, 0.0, t, {"kill_decode": 40.0,
+                                       "straggle_decode": 40.0,
+                                       "kv_degrade": 40.0},
+                          slow_duration=0.02, downtime=0.05)
+    assert sched
+    inj = ChaosInjector(sched, seed=11)
+    inj.arm(sim)
+    sim.run(t + 10.0)
+    assert inj.injected >= 1
+    s = sim.metrics.summary(t + 10.0)
+    assert s["requests"] == 16
+    rids = [r.rid for r in sim.metrics.finished]
+    assert len(rids) == len(set(rids))
+    assert sim.kv_link.bandwidth == pytest.approx(bw0)  # degradations undone
