@@ -7,7 +7,8 @@ PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
 	bench-cache bench-sharded bench-rebalance bench-chaos bench-chaos-smoke \
-	trace-check docs docs-check linkcheck
+	trace-check docs docs-check linkcheck analyze analyze-baseline \
+	verify-sanitized
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -59,3 +60,20 @@ docs-check:
 # offline markdown link check over docs/ + README.md
 linkcheck:
 	PYTHONPATH=src python tools/check_links.py README.md docs
+
+# static trace-safety + determinism analyzer (tools/analyzer). Fails on
+# any finding not in tools/analyzer/baseline.json; suppressions require
+# an inline `# repro-analyze: disable=RULE (reason)` pragma with a reason.
+analyze:
+	python -m tools.analyzer
+
+# re-accept the current findings as the baseline (review the diff!)
+analyze-baseline:
+	python -m tools.analyzer --update-baseline
+
+# chaos smoke with the runtime invariant sanitizer attached to every
+# pool: clock monotonicity, exactly-once completion, checkpoint
+# conservation, cache-gid uniqueness, no orphaned probes. Any recorded
+# violation fails the run.
+verify-sanitized:
+	PYTHONPATH=src python -m benchmarks.bench_chaos --smoke --sanitize

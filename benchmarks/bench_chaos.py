@@ -74,14 +74,30 @@ ARMS = {
 }
 
 
+# --sanitize: run every section with the runtime invariant sanitizer
+# attached (repro.serving.sanitizer) and fail loudly on any violation.
+# Off by default so the default bench stays bit-identical to a
+# sanitizer-free build.
+SANITIZE = False
+
+
 def _cfg(**kw):
     base = dict(num_vectors=N_VECTORS, dim=DIM, graph_degree=16,
                 max_requests=8, top_m=32, parents_per_step=2,
                 task_batch=2048, visited_slots=512, top_k=10,
                 semantic_cache_enabled=True, cache_capacity=64,
-                num_shards=SHARDS, prefill_deadline_ms=DEADLINE_MS)
+                num_shards=SHARDS, prefill_deadline_ms=DEADLINE_MS,
+                sanitizer_enabled=SANITIZE)
     base.update(kw)
     return VectorPoolConfig(**base)
+
+
+def _assert_sanitized(pool):
+    """With --sanitize, a single recorded violation fails the bench."""
+    if pool.sanitizer is not None:
+        pool.sanitizer.assert_clean()
+        return len(pool.sanitizer.violations)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +154,7 @@ def _run_frontier_arm(db, queries, arm_kw, n_faults, n_probes):
         "hedges": m.hedges, "hedges_won": m.hedges_won,
         "hedges_wasted": m.hedges_wasted,
         "lost_requests": 0, "duplicated_requests": 0,
+        "sanitizer_violations": _assert_sanitized(pool),
     }
 
 
@@ -200,7 +217,8 @@ def _cache_section(n_cache):
                 for r, d in zip(vreq.result_ids, vreq.result_dists))
         out[arm] = {"repeat_hit_rate": hits / n_cache,
                     "cache_recovered": pool.metrics.cache_recovered,
-                    "cache_lost": pool.metrics.cache_lost}
+                    "cache_lost": pool.metrics.cache_lost,
+                    "sanitizer_violations": _assert_sanitized(pool)}
     assert out["off"]["cache_lost"] == n_cache
     assert out["on"]["cache_recovered"] == n_cache
     assert out["on"]["repeat_hit_rate"] > out["off"]["repeat_hit_rate"], out
@@ -252,11 +270,16 @@ def _cluster_section(n_requests, rates):
                     "decode_deaths": s["decode_deaths"],
                     "probes_cancelled": s["probes_cancelled"],
                     "re_prefills": s["re_prefills"],
-                    "faults_injected": inj.injected})
+                    "faults_injected": inj.injected,
+                    "sanitizer_violations":
+                        _assert_sanitized(sim.vector_pool)})
     return out
 
 
-def run(emit_rows: bool = True, out_path: str = None, smoke: bool = False):
+def run(emit_rows: bool = True, out_path: str = None, smoke: bool = False,
+        sanitize: bool = False):
+    global SANITIZE
+    SANITIZE = sanitize
     if out_path is None:
         out_path = (os.path.join(tempfile.gettempdir(),
                                  "BENCH_chaos_smoke.json")
@@ -274,7 +297,8 @@ def run(emit_rows: bool = True, out_path: str = None, smoke: bool = False):
                      "probe_rate_qps": PROBE_RATE_QPS,
                      "deadline_ms": DEADLINE_MS,
                      "expected_faults_per_run": list(counts),
-                     "slow_factor": SLOW_FACTOR, "smoke": smoke},
+                     "slow_factor": SLOW_FACTOR, "smoke": smoke,
+                     "sanitize": sanitize},
         "frontier": frontier,
         "cache_loss": cache,
         "cluster": cluster,
@@ -315,5 +339,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="attach the runtime invariant sanitizer to every "
+                         "pool and fail on any violation")
     args = ap.parse_args()
-    print(run(out_path=args.out, smoke=args.smoke))
+    print(run(out_path=args.out, smoke=args.smoke, sanitize=args.sanitize))

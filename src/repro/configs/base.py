@@ -274,6 +274,14 @@ class VectorPoolConfig:
     # entries onto a surviving shard (original gids + timestamps — repeat
     # prompts still hit) instead of silently converting them to misses
     cache_backup_enabled: bool = False
+    # runtime invariant sanitizer (repro.serving.sanitizer): wrap the
+    # pool's step/kill/move/index seams with record-only checks —
+    # per-replica clock monotonicity, exactly-once completion per rid,
+    # checkpoint conservation across moves/rescues, cache gid uniqueness
+    # across eviction+migration, and (under ClusterSim) no orphaned
+    # probes after kills. Off (default) = nothing is wrapped; behavior
+    # is bit-identical to a build without the sanitizer
+    sanitizer_enabled: bool = False
     # hardware model (TPU v5e-class, assigned constants)
     peak_flops: float = 197e12
     hbm_bw: float = 819e9

@@ -128,7 +128,7 @@ class PoolMetrics:
     def latencies(self, kind: Optional[str] = None) -> np.ndarray:
         xs = [r.t_completed - r.t_arrival for r in self.completed
               if r.t_completed is not None and (kind is None or r.kind == kind)]
-        return np.asarray(xs) if xs else np.zeros(0)
+        return np.asarray(xs, np.float64) if xs else np.zeros(0, np.float64)
 
     def p(self, q: float, kind: Optional[str] = None) -> float:
         lat = self.latencies(kind)
@@ -232,6 +232,12 @@ class VectorPool:
         self._pending_seq = 0  # deterministic tiebreak (id() varies by run)
         self._build(db, graph, replicas, policy, classes)
         self.peak_replicas = len(self.replicas)
+        # opt-in runtime invariant layer; None = nothing wrapped, the
+        # pool is bit-identical to a sanitizer-free build
+        self.sanitizer = None
+        if getattr(cfg, "sanitizer_enabled", False):
+            from repro.serving.sanitizer import attach
+            self.sanitizer = attach(self)
 
     # -------------------------------------------------- construction hooks
     def _build(self, db, graph, replicas: int, policy: str, classes):
@@ -1037,7 +1043,7 @@ class ShardedVectorPool(VectorPool):
                     or fan.parent.rclass is not None \
                     and fan.parent.rclass.lane == "background":
                 continue
-            for s in list(fan.pending):
+            for s in sorted(fan.pending):
                 crid = self._child_rid(prid, s)
                 if crid in self._hedged:
                     continue  # one twin max per child
@@ -1132,7 +1138,7 @@ class ShardedVectorPool(VectorPool):
         fan = self._fanout.pop(rid, None)
         if fan is None:
             return False
-        for s in fan.pending:
+        for s in sorted(fan.pending):
             crid = self._child_rid(rid, s)
             self._cancel_child(crid, s)
             twin_rid = self._hedged.pop(crid, None)

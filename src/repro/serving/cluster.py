@@ -105,6 +105,10 @@ class ClusterSim:
         self._recent_stalls: deque = deque(maxlen=256)
         self.t_now = 0.0
         self._chips = chips_per_instance
+        if self.vector_pool.sanitizer is not None:
+            # extend the pool's invariant layer with the cluster-level
+            # orphaned-probe check (no-op when sanitizer_enabled is off)
+            self.vector_pool.sanitizer.attach_cluster(self)
 
     # ------------------------------------------------------------- events
     def schedule(self, t: float, fn: Callable):

@@ -102,6 +102,7 @@ def _merge_topm(top_ids, top_dists, expanded, cand_ids, cand_dists):
     # keep the M smallest distances: top_k on the negation, ties to the
     # lower index (existing entries come first in the concat)
     neg_best, order = jax.lax.top_k(-dists, M)
+    # repro-analyze: disable=JCG001 (single-query merge lane under vmap: ids/exp are replicated per-lane values, never batch-sharded under a mesh — audited against the SPMD concat-gather miscompile)
     return ids[order], -neg_best, exp[order]
 
 

@@ -1,0 +1,25 @@
+"""Known-bad fixture: the pre-fix ``models/moe.py`` dispatch shape.
+
+Gathers whose operand is a concat/pad result — the jax 0.4.x SPMD
+partitioner miscompiles these under a mesh (ROADMAP standing
+constraint). Expected: JCG001 on every gather below.
+"""
+import jax.numpy as jnp
+
+
+def dispatch(x, pad_row, slot_tok):
+    # pre-fix moe: pad the token table with a sentinel row, then gather
+    xp = jnp.concatenate([x, pad_row])
+    xe = xp[slot_tok]  # JCG001: advanced subscript on a concat result
+    return xe
+
+
+def take_route(x, idx):
+    padded = jnp.pad(x, ((0, 1), (0, 0)))
+    return jnp.take(padded, idx, axis=0)  # JCG001: jnp.take on a pad result
+
+
+def method_take(a, b, idx):
+    stacked = jnp.vstack([a, b])
+    table = stacked.reshape(-1, a.shape[-1])  # provenance survives reshape
+    return table.take(idx, axis=0)  # JCG001: .take() on a concat descendant

@@ -1,0 +1,32 @@
+"""Known-bad fixture: determinism hazards.
+
+Expected: DET001 (unseeded / global-state RNGs), DET002 (wall-clock
+reads), DET003 (set-iteration order feeding decisions).
+"""
+import random
+import time
+
+import numpy as np
+
+
+def sample_ids(n):
+    rng = np.random.default_rng()  # DET001: no seed — entropy from the OS
+    jitter = random.random()  # DET001: stdlib global-state RNG
+    noise = np.random.rand(4)  # DET001: legacy global-state numpy RNG
+    return rng.integers(0, n, 4), jitter, noise
+
+
+def stamp_request(req):
+    req.t_submitted = time.time()  # DET002: wall-clock read in sim code
+    return req
+
+
+def drain_pending(extra):
+    pending = {3, 1, 2}
+    pending = pending | extra
+    order = []
+    for rid in pending:  # DET003: iterating a set
+        order.append(rid)
+    first = list(pending)  # DET003: list() materializes arbitrary order
+    victim = pending.pop()  # DET003: .pop() takes an arbitrary element
+    return order, first, victim

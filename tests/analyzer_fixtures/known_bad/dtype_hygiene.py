@@ -1,0 +1,19 @@
+"""Known-bad fixture: dtype hygiene.
+
+Expected: DTY001 (default-float64 empty fallback), DTY002
+(dtype-asymmetric conditional). ``trinity_pool.py:131`` was the in-repo
+DTY001 instance this fixture preserves.
+"""
+import numpy as np
+
+
+def percentile_or_empty(xs):
+    if xs:
+        return np.asarray(xs, np.float64)
+    return np.zeros(0)  # DTY001: float64 fallback merged with data path
+
+
+def pick_buffer(flag, n):
+    # DTY002: only one branch pins a dtype — result dtype depends on
+    # which branch ran
+    return np.zeros(n, np.float32) if flag else np.zeros(n)

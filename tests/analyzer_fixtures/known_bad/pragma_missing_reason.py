@@ -1,0 +1,10 @@
+"""Known-bad fixture: a pragma without a reason does not suppress.
+
+Expected: PRAGMA001 on the pragma line AND the underlying DTY001 still
+fires (a reasonless pragma is void).
+"""
+import numpy as np
+
+
+def empty_scores():
+    return np.zeros(0)  # repro-analyze: disable=DTY001

@@ -1,0 +1,11 @@
+"""Known-bad fixture: a pragma naming an unknown rule id.
+
+Expected: PRAGMA002 on the pragma line AND the underlying DTY001 still
+fires (the pragma names the wrong rule).
+"""
+import numpy as np
+
+
+def empty_scores():
+    # repro-analyze: disable=NOPE999 (typo'd rule id)
+    return np.zeros(0)

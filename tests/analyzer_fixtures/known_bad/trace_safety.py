@@ -1,0 +1,44 @@
+"""Known-bad fixture: trace-safety hazards inside jitted functions.
+
+Expected: TRC001 (host syncs), TRC002 (Python control flow on traced
+values), TRC003 (closure-captured module-level host array), TRC004
+(variable-length jnp construction in a loop).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_TABLE = np.arange(16)
+
+
+@jax.jit
+def host_sync(x):
+    v = float(x)  # TRC001: float() on a traced value
+    if x > 0:  # TRC002: Python branch on a traced value
+        v = v + 1.0
+    return v + jnp.sum(x)
+
+
+@jax.jit
+def item_sync(x):
+    return x.sum().item()  # TRC001: .item() on a traced value
+
+
+@jax.jit
+def traced_assert(x):
+    assert x.sum() > 0  # TRC002: assert on a traced value
+    return x * 2.0
+
+
+@jax.jit
+def closure_capture(x):
+    return x + _TABLE  # TRC003: module-level host array baked into jaxpr
+
+
+def loop_alloc(xs):
+    out = []
+    for x in xs:
+        # TRC004: shape depends on len() inside a loop — fresh trace per
+        # distinct length once this reaches a jitted consumer
+        out.append(jnp.zeros((len(xs), 4), jnp.float32) + x)
+    return out

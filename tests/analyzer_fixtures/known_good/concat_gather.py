@@ -1,0 +1,27 @@
+"""Known-good fixture: concat/pad used safely — zero findings expected.
+
+Gathers from unconcatenated operands, elementwise math on concat
+results, and static subscripts are all fine; only gather-from-concat is
+the hazard.
+"""
+import jax.numpy as jnp
+
+
+def dispatch_pad_free(x, slot_tok):
+    # post-fix moe shape: clamp into the real rows and mask — the gather
+    # operand was never concatenated
+    idx = jnp.clip(slot_tok, 0, x.shape[0] - 1)
+    gathered = x[idx]
+    return jnp.where((slot_tok < x.shape[0])[:, None], gathered, 0.0)
+
+
+def concat_elementwise(a, b):
+    cat = jnp.concatenate([a, b])
+    return cat * 2.0 + jnp.sum(cat)
+
+
+def concat_static_subscript(a, b):
+    cat = jnp.concatenate([a, b])
+    head = cat[0]  # constant index: static lowering, not a gather
+    tail = cat[1:]  # basic slice: static lowering
+    return head, tail

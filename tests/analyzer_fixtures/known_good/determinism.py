@@ -1,0 +1,26 @@
+"""Known-good fixture: deterministic RNG/clock/set usage — zero findings.
+
+Seeded generator instances, sim-clock time, and sorted() iteration over
+sets are the repo conventions the bad fixture violates.
+"""
+import numpy as np
+
+
+def sample_ids(n, seed):
+    rng = np.random.default_rng(seed)  # seeded: deterministic
+    return rng.integers(0, n, 4)
+
+
+def stamp_request(req, now):
+    req.t_submitted = now  # sim event clock, threaded in
+    return req
+
+
+def drain_pending(extra):
+    pending = {3, 1, 2}
+    pending = pending | extra
+    order = []
+    for rid in sorted(pending):  # sorted(): order-insensitive
+        order.append(rid)
+    count = len(pending)  # len/sum/min/max are order-insensitive sinks
+    return order, count

@@ -1,0 +1,12 @@
+"""Known-good fixture: dtype-pinned allocations — zero findings."""
+import numpy as np
+
+
+def percentile_or_empty(xs):
+    if xs:
+        return np.asarray(xs, np.float64)
+    return np.zeros(0, np.float64)  # dtype pinned to match the data path
+
+
+def pick_buffer(flag, n):
+    return np.zeros(n, np.float32) if flag else np.ones(n, np.float32)

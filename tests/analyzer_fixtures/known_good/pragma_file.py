@@ -1,0 +1,13 @@
+"""Known-good fixture: a file-wide pragma — zero ACTIVE findings.
+
+``disable-file`` suppresses the named rule everywhere in the file; the
+reason is still mandatory.
+"""
+# repro-analyze: disable-file=DET002 (fixture: wall-clock reporting only, nothing feeds back into sim time)
+import time
+
+
+def wall_clock_report():
+    t0 = time.perf_counter()
+    t1 = time.time()
+    return t1 - t0

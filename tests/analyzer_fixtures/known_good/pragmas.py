@@ -1,0 +1,15 @@
+"""Known-good fixture: valid pragma suppressions — zero ACTIVE findings.
+
+Both forms carry reasons: a same-line pragma suppresses findings on its
+own line; a comment-only-line pragma suppresses the next line.
+"""
+import numpy as np
+
+
+def same_line():
+    return np.zeros(0)  # repro-analyze: disable=DTY001 (fixture: same-line pragma form)
+
+
+def next_line():
+    # repro-analyze: disable=DTY001 (fixture: comment-line pragma applies to the next line)
+    return np.zeros(0)

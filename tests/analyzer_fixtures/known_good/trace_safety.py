@@ -1,0 +1,38 @@
+"""Known-good fixture: trace-safe jitted functions — zero findings.
+
+Shape reads are trace-static, ``static_argnames`` params are host
+values, branching belongs on those; device math stays in jnp.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def on_device(x):
+    v = jnp.where(x > 0, x + 1.0, x)  # device select, no Python branch
+    return v + jnp.sum(x)
+
+
+@jax.jit
+def shape_static(x):
+    n, d = x.shape  # .shape reads are trace-static
+    if d > 8:
+        return x[:, :8]
+    return x + float(n)  # float() of a static shape int is host-side math
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_static(x, k):
+    if k > x.shape[-1]:  # k is static_argnames — a host int
+        k = x.shape[-1]
+    return jnp.sort(x, axis=-1)[..., -k:]
+
+
+def fixed_capacity(xs, cap):
+    out = []
+    for x in xs:
+        buf = jnp.zeros((cap, 4), jnp.float32)  # fixed shape, no call
+        out.append(buf + x)
+    return out

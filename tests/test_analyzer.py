@@ -1,0 +1,197 @@
+"""Tests for tools/analyzer: the fixture corpus, pragma semantics,
+baseline round-trip, and the shipped repo scan staying clean.
+
+The fixture corpus under tests/analyzer_fixtures/ is excluded from the
+default scan (it is known-bad on purpose); these tests point the
+analyzer at it explicitly.
+"""
+import collections
+import os
+
+import pytest
+
+from tools.analyzer.core import (AnalyzerConfig, FileContext, analyze_file,
+                                 analyze_paths, default_config,
+                                 load_baseline, parse_pragmas,
+                                 write_baseline)
+
+BAD_ROOT = "tests/analyzer_fixtures/known_bad"
+GOOD_ROOT = "tests/analyzer_fixtures/known_good"
+
+
+def _scan(root):
+    return analyze_paths(AnalyzerConfig(roots=(root,), exclude=()))
+
+
+def _rules_by_file(result):
+    out = collections.defaultdict(list)
+    for f in result.findings:
+        out[os.path.basename(f.path)].append(f.rule)
+    return {k: sorted(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# known-bad corpus: every rule family fires with the exact expected ids
+# ---------------------------------------------------------------------------
+
+
+class TestKnownBad:
+    @pytest.fixture(scope="class")
+    def bad(self):
+        return _scan(BAD_ROOT)
+
+    def test_concat_gather_flags_prefix_moe_pattern(self, bad):
+        rules = _rules_by_file(bad)["concat_gather.py"]
+        assert rules == ["JCG001", "JCG001", "JCG001"]
+
+    def test_jcg_flags_the_exact_gather_lines(self, bad):
+        lines = sorted(f.line for f in bad.findings
+                       if f.rule == "JCG001")
+        # xp[slot_tok], jnp.take(padded, ...), table.take(...)
+        assert lines == [13, 19, 25]
+
+    def test_trace_safety_all_four_rules(self, bad):
+        rules = _rules_by_file(bad)["trace_safety.py"]
+        assert rules == ["TRC001", "TRC001", "TRC002", "TRC002",
+                         "TRC003", "TRC004"]
+
+    def test_determinism_all_three_rules(self, bad):
+        rules = _rules_by_file(bad)["determinism.py"]
+        assert rules == ["DET001", "DET001", "DET001", "DET002",
+                         "DET003", "DET003", "DET003"]
+
+    def test_dtype_both_rules(self, bad):
+        rules = _rules_by_file(bad)["dtype_hygiene.py"]
+        assert rules == ["DTY001", "DTY002"]
+
+    def test_reasonless_pragma_is_void_and_flagged(self, bad):
+        rules = _rules_by_file(bad)["pragma_missing_reason.py"]
+        # the pragma itself is a finding AND does not suppress DTY001
+        assert rules == ["DTY001", "PRAGMA001"]
+
+    def test_unknown_rule_pragma_is_flagged(self, bad):
+        rules = _rules_by_file(bad)["pragma_unknown_rule.py"]
+        assert rules == ["DTY001", "PRAGMA002"]
+
+    def test_findings_carry_hints_and_positions(self, bad):
+        for f in bad.findings:
+            assert f.line > 0
+            assert f.message
+            if not f.rule.startswith("PRAGMA"):
+                assert f.hint, f"{f.rule} finding has no fix hint"
+
+
+# ---------------------------------------------------------------------------
+# known-good corpus: zero false positives
+# ---------------------------------------------------------------------------
+
+
+class TestKnownGood:
+    @pytest.fixture(scope="class")
+    def good(self):
+        return _scan(GOOD_ROOT)
+
+    def test_zero_active_findings(self, good):
+        assert good.findings == [], [
+            f"{f.path}:{f.line} {f.rule}" for f in good.findings]
+
+    def test_valid_pragmas_suppress_with_reasons(self, good):
+        by_file = collections.defaultdict(list)
+        for f, reason in good.suppressed:
+            assert reason  # every suppression carries its written reason
+            by_file[os.path.basename(f.path)].append(f.rule)
+        # same-line + next-line pragma forms, and the file-wide form
+        assert sorted(by_file["pragmas.py"]) == ["DTY001", "DTY001"]
+        assert sorted(by_file["pragma_file.py"]) == ["DET002", "DET002"]
+
+
+# ---------------------------------------------------------------------------
+# pragma parsing unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _ctx(source):
+    return FileContext("<mem>", "mem.py", source)
+
+
+class TestPragmas:
+    def test_same_line_applies_to_that_line(self):
+        pragmas, problems = parse_pragmas(_ctx(
+            "x = 1  # repro-analyze: disable=DET001 (why)\n"))
+        assert problems == []
+        assert pragmas[0].applies_to == 1
+        assert pragmas[0].rules == ("DET001",)
+
+    def test_comment_line_applies_to_next_line(self):
+        pragmas, _ = parse_pragmas(_ctx(
+            "# repro-analyze: disable=DET001 (why)\nx = 1\n"))
+        assert pragmas[0].applies_to == 2
+
+    def test_multiple_rules_one_pragma(self):
+        pragmas, problems = parse_pragmas(_ctx(
+            "# repro-analyze: disable=DET001,DET002 (why)\n"))
+        assert problems == []
+        assert pragmas[0].rules == ("DET001", "DET002")
+
+    def test_malformed_pragma_is_pragma003(self):
+        _, problems = parse_pragmas(_ctx(
+            "# repro-analyze: please ignore this\n"))
+        assert [p.rule for p in problems] == ["PRAGMA003"]
+
+    def test_suppression_needs_reason(self):
+        src = ("import numpy as np\n"
+               "def f():\n"
+               "    return np.zeros(0)  # repro-analyze: disable=DTY001\n")
+        active, suppressed, _ = analyze_file(_ctx(src), AnalyzerConfig())
+        assert sorted(f.rule for f in active) == ["DTY001", "PRAGMA001"]
+        assert suppressed == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + allowlist
+# ---------------------------------------------------------------------------
+
+
+class TestBaseline:
+    def test_round_trip_swallows_known_findings(self, tmp_path):
+        bad = _scan(BAD_ROOT)
+        path = str(tmp_path / "baseline.json")
+        write_baseline([bad.fingerprint_of(f) for f in bad.findings], path)
+        new, old = bad.partition_baseline(load_baseline(path))
+        assert new == []
+        assert len(old) == len(bad.findings)
+
+    def test_fingerprints_survive_line_shifts(self):
+        bad = _scan(BAD_ROOT)
+        fps = sorted(bad.fingerprint_of(f) for f in bad.findings)
+        # keyed on line TEXT, not number: a pure shift reuses the key
+        assert all("::" in fp for fp in fps)
+        assert not any("::%d::" % f.line in fp
+                       for f in bad.findings for fp in fps)
+
+    def test_allowlist_suppresses_by_path_with_reason(self):
+        cfg = AnalyzerConfig(
+            roots=(BAD_ROOT,), exclude=(),
+            allow={"DET002": ((BAD_ROOT, "fixture wall-clock is fine"),)})
+        r = analyze_paths(cfg)
+        assert not any(f.rule == "DET002" for f in r.findings)
+        assert [(f.rule, reason) for f, reason in r.allowlisted] == [
+            ("DET002", "fixture wall-clock is fine")]
+
+
+# ---------------------------------------------------------------------------
+# the shipped scan: the repo itself must be clean
+# ---------------------------------------------------------------------------
+
+
+def test_repo_scan_is_clean():
+    result = analyze_paths(default_config())
+    new, _ = result.partition_baseline(load_baseline())
+    assert new == [], "\n".join(
+        f"{f.path}:{f.line} {f.rule} {f.message}" for f in new)
+
+
+def test_every_shipped_suppression_has_a_reason():
+    result = analyze_paths(default_config())
+    for f, reason in result.suppressed + result.allowlisted:
+        assert reason.strip(), f"{f.path}:{f.line} {f.rule} lacks a reason"

@@ -1,0 +1,217 @@
+"""Tests for serving/sanitizer.py: the runtime invariant layer.
+
+Each invariant (clock monotonicity, exactly-once completion, checkpoint
+conservation across kills/moves, cache-gid uniqueness, no orphaned
+probes) must (a) stay silent on a clean chaotic run and (b) trip on a
+hand-broken pool — a sanitizer that can't catch a planted bug guards
+nothing.
+"""
+import copy
+
+import pytest
+
+from repro.configs.base import VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import ShardedVectorPool
+from repro.serving.chaos import ChaosInjector, make_schedule
+from repro.vector.dataset import make_dataset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db, queries = make_dataset(3000, 32, num_clusters=16, num_queries=64,
+                               seed=1)
+    return db, queries
+
+
+def _cfg(**kw):
+    base = dict(num_vectors=3000, dim=32, graph_degree=16, max_requests=16,
+                top_m=32, parents_per_step=2, task_batch=2048,
+                visited_slots=512, top_k=10, semantic_cache_enabled=True,
+                cache_capacity=64, num_shards=4, sanitizer_enabled=True)
+    base.update(kw)
+    return VectorPoolConfig(**base)
+
+
+def _burst(pool, queries, n, t0=0.0, gap=1e-4, deadline=0.05):
+    t = t0
+    for i in range(n):
+        pool.submit(VectorRequest(i, "prefill", queries[i], t, t + deadline))
+        t += gap
+    return t
+
+
+# ---------------------------------------------------------------------------
+# knobs-off / clean-run behavior
+# ---------------------------------------------------------------------------
+
+
+def test_sanitizer_off_by_default(setup):
+    db, _ = setup
+    pool = ShardedVectorPool(_cfg(sanitizer_enabled=False), db, seed=0)
+    assert pool.sanitizer is None
+
+
+def test_clean_chaotic_run_records_zero_violations(setup):
+    """Kills + stragglers + shard losses against a live burst: the real
+    recovery paths must not trip a single invariant."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(rescue_enabled=True, hedge_enabled=True),
+                             db, seed=0)
+    assert pool.sanitizer is not None
+    t_last = _burst(pool, queries, 48)
+    sched = make_schedule(3, 5e-4, t_last + 0.02,
+                          {"kill_replica": 400.0, "straggle_replica": 200.0,
+                           "lose_shard": 100.0},
+                          slow_duration=2e-3, downtime=2e-3)
+    inj = ChaosInjector(sched, seed=3)
+    inj.run_pool(pool, t_last + 1.0)
+    assert inj.injected >= 3
+    rids = sorted(r.rid for r in pool.metrics.completed)
+    assert rids == list(range(48))
+    pool.sanitizer.assert_clean()
+    assert pool.sanitizer.report() == []
+
+
+# ---------------------------------------------------------------------------
+# each invariant trips on a planted bug
+# ---------------------------------------------------------------------------
+
+
+def _kinds(pool):
+    return {v.kind for v in pool.sanitizer.violations}
+
+
+def test_clock_rollback_trips(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t_last = _burst(pool, queries, 8)
+    pool.run_until(t_last + 0.5)
+    pool.sanitizer.assert_clean()
+    rep = pool.replicas[0]
+    rep.clock = 0.0  # planted bug: replica time travels backwards
+    pool.run_until(1e-5)
+    assert "clock" in _kinds(pool)
+    with pytest.raises(AssertionError, match="clock moved backwards"):
+        pool.sanitizer.assert_clean()
+
+
+def test_duplicate_completion_trips(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t_last = _burst(pool, queries, 8)
+    pool.run_until(t_last + 0.5)
+    pool.sanitizer.assert_clean()
+    pool.metrics.completed.append(pool.metrics.completed[0])  # planted dup
+    pool.run_until(t_last + 0.6)
+    assert "completion" in _kinds(pool)
+    with pytest.raises(AssertionError, match="completed twice"):
+        pool.sanitizer.assert_clean()
+
+
+def test_completion_without_timestamp_trips(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t_last = _burst(pool, queries, 8)
+    pool.run_until(t_last + 0.5)
+    ghost = copy.copy(pool.metrics.completed[0])
+    ghost.rid = 9999
+    ghost.t_completed = None  # planted bug: completed with no time
+    pool.metrics.completed.append(ghost)
+    pool.run_until(t_last + 0.6)
+    assert any("without a completion time" in v.detail
+               for v in pool.sanitizer.violations)
+
+
+def test_kill_dropping_in_flight_trips(setup):
+    """A kill path that forgets to re-queue the victim's in-flight work
+    is exactly the lost-request bug class the chaos harness exists for."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(rescue_enabled=False), db, seed=0)
+    _burst(pool, queries, 24)
+    pool.run_until(8e-4)  # mid-burst: work is in flight
+    victim = max(range(len(pool.replicas)),
+                 key=lambda i: len(pool.replicas[i].in_flight))
+    assert pool.replicas[victim].in_flight
+    for sched in pool.schedulers:
+        sched.submit = lambda req: None  # planted bug: restart vanishes
+    pool.kill_replica(victim)
+    assert "checkpoint" in _kinds(pool)
+    assert any("nowhere afterwards" in v.detail
+               for v in pool.sanitizer.violations)
+
+
+def test_rescue_without_checkpoint_trips(setup):
+    """rescue_enabled promises snapshot-resume; a rescue that re-queues
+    from scratch silently throws the checkpoint away."""
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(rescue_enabled=True), db, seed=0)
+    _burst(pool, queries, 24)
+    pool.run_until(8e-4)
+    victim = max(range(len(pool.replicas)),
+                 key=lambda i: len(pool.replicas[i].in_flight))
+    rep = pool.replicas[victim]
+    assert rep.in_flight and rep.snapshots
+
+    def bad_rescue(req, ckpt, t, _s=pool.schedulers[rep.shard]):
+        req.checkpoint = None  # planted bug: checkpoint dropped
+        _s.submit(req)
+
+    pool.schedulers[rep.shard].requeue_rescued = bad_rescue
+    pool.kill_replica(victim)
+    assert any("no checkpoint attached" in v.detail
+               for v in pool.sanitizer.violations)
+
+
+def test_move_dropping_in_flight_trips(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    _burst(pool, queries, 24)
+    pool.run_until(8e-4)
+    victim = max(range(len(pool.replicas)),
+                 key=lambda i: len(pool.replicas[i].in_flight))
+    src = pool.replicas[victim].shard
+    dst = (src + 1) % pool.cfg.num_shards
+    # planted bug: the planned move's re-queue is a no-op
+    pool.schedulers[src].requeue_preempted = lambda req, ckpt, t: None
+    t = min(r.clock for r in pool.replicas)
+    pool._move_replica(src, dst, t)
+    assert "checkpoint" in _kinds(pool)
+    assert any("planned move" in v.detail
+               for v in pool.sanitizer.violations)
+
+
+def test_gid_corruption_trips(setup):
+    db, queries = setup
+    pool = ShardedVectorPool(_cfg(), db, seed=0)
+    t_last = _burst(pool, queries, 8)
+    pool.run_until(t_last + 0.5)
+    pool.sanitizer.assert_clean()
+    # planted bug: a dangling gid→location mapping (the double-serve /
+    # stale-serve precursor eviction+migration races produce)
+    pool.shards._gid_loc[10 ** 6] = (0, 0)
+    pool.run_until(t_last + 0.6)
+    assert "gid" in _kinds(pool)
+
+
+def test_orphaned_probe_trips(setup):
+    from repro.configs import get_smoke_config
+    from repro.serving.cluster import ClusterSim
+    from repro.vector.graph import make_cagra_graph
+    db, _ = setup
+    cfg = _cfg(num_shards=1)
+    graph = make_cagra_graph(db, 16, seed=1)
+    sim = ClusterSim(get_smoke_config("phi3-medium-14b"), cfg, db, graph,
+                     placement="disaggregated", policy="trinity",
+                     n_prefill=2, n_decode=2, decode_batch=8)
+    san = sim.vector_pool.sanitizer
+    assert san is not None
+    sim._collect_pool_completions()
+    assert san.report() == []
+    # planted bug: a kill path that forgot to cancel the dead instance's
+    # probe — the callback waits forever
+    sim._probe_cb[999_999] = (None, lambda r, v: None, 0.0)
+    sim._collect_pool_completions()
+    assert "probe" in {v.kind for v in san.violations}
+    with pytest.raises(AssertionError, match="orphaned probe"):
+        san.assert_clean()

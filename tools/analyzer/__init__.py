@@ -1,0 +1,39 @@
+"""repro-analyze: a JAX trace-safety + determinism static analyzer.
+
+The repo's two standing constraints — the jax 0.4.x SPMD pass that
+silently miscompiles gathers fed from ``concat([batch-sharded x,
+pad_row])`` (rediscovered the hard way in ``models/moe.py``), and the
+scheduler-trace bit-identity pin that every PR must preserve — were
+enforced only by reviewer memory. This package turns those house rules
+(and the trace-safety / dtype conventions that back them) into
+machine-checked rules: a rule-based AST analyzer over ``src/``,
+``benchmarks/`` and ``tests/`` with four pass families:
+
+``JCG``  jax-concat-gather — dataflow from ``jnp.concatenate``/
+         ``jnp.pad`` results into ``take``/gather/advanced indexing
+         (the ROADMAP standing-constraint audit, mechanized).
+``TRC``  trace-safety — host syncs and retrace hazards inside jitted
+         functions: ``np.asarray``/``.item()``/``float()``/``bool()``
+         on traced values, Python ``if`` on traced values,
+         closure-captured host arrays, variable-length ``jnp`` array
+         construction in hot loops (pow2-padding convention).
+``DET``  determinism — unseeded RNGs, wall-clock reads reaching
+         sim-clock or scheduling code (wall-clock *reporting* in
+         ``launch/``/``benchmarks/`` is allowlisted), and set-iteration
+         order feeding ordering-sensitive scheduler/pool decisions
+         (the scheduler-trace bit-identity pin).
+``DTY``  dtype/shape hygiene — default-float64 fallbacks like
+         ``np.zeros(0)`` merged with float32 paths.
+
+Findings carry file:line, a rule id and a fix hint. Suppressions are
+inline pragmas that MUST carry a reason::
+
+    x = risky()  # repro-analyze: disable=DET002 (wall-clock reporting)
+
+or a checked-in baseline (``tools/analyzer/baseline.json``) for debt
+that is tracked but not yet fixed. ``python -m tools.analyzer`` (or
+``make analyze``) exits non-zero on any unbaselined finding.
+"""
+from tools.analyzer.core import AnalyzerConfig, Finding, analyze_paths
+
+__all__ = ["AnalyzerConfig", "Finding", "analyze_paths"]

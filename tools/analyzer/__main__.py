@@ -1,0 +1,60 @@
+"""CLI: ``python -m tools.analyzer`` (what ``make analyze`` runs).
+
+Exit status 0 iff every finding is pragma-suppressed (with a reason),
+path-allowlisted (with a reason) or in the checked-in baseline;
+1 otherwise. ``--update-baseline`` rewrites the baseline to the current
+actionable set — the escape hatch for landing the analyzer against
+pre-existing debt, not for new code.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.analyzer import core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyzer",
+        description="repro-analyze: JAX trace-safety + determinism "
+                    "static analyzer")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan (default: src benchmarks "
+                         "tests)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite tools/analyzer/baseline.json to the "
+                         "current actionable findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report all findings)")
+    ap.add_argument("--show-allowlisted", action="store_true",
+                    help="list allowlisted findings with their reasons")
+    args = ap.parse_args(argv)
+
+    cfg = core.default_config()
+    if args.paths:
+        cfg.roots = tuple(args.paths)
+
+    result = core.analyze_paths(cfg)
+    baseline = [] if args.no_baseline else core.load_baseline()
+    new, baselined = result.partition_baseline(baseline)
+
+    if args.update_baseline:
+        core.write_baseline(result.fingerprint_of(f)
+                            for f in result.findings)
+        print(f"baseline updated: {len(result.findings)} fingerprint(s) "
+              f"-> {core.BASELINE_PATH}")
+        return 0
+
+    if args.json:
+        print(core.render_json(result, new, baselined))
+    else:
+        print(core.render_human(result, new, baselined,
+                                show_allowlisted=args.show_allowlisted))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Rule registry for repro-analyze.
+
+Each rule module exposes ``run(ctx) -> List[Finding]``. ``run_all``
+dispatches every pass family over one parsed file; ``ALL_RULE_IDS`` is
+the closed set of valid rule ids (pragma validation rejects anything
+else, so a typo in a suppression is itself a finding).
+"""
+from __future__ import annotations
+
+from typing import List
+
+ALL_RULE_IDS = frozenset({
+    # jax-concat-gather
+    "JCG001",
+    # trace-safety
+    "TRC001", "TRC002", "TRC003", "TRC004",
+    # determinism
+    "DET001", "DET002", "DET003",
+    # dtype/shape hygiene
+    "DTY001", "DTY002",
+    # analyzer self-hygiene (not pass rules; emitted by the engine)
+    "PRAGMA001", "PRAGMA002", "PRAGMA003", "PARSE001",
+})
+
+# families a pragma/baseline may reference; engine rules can't be
+# disabled by pragma (a pragma suppressing pragma-validation is not a
+# thing)
+SUPPRESSIBLE_RULE_IDS = frozenset(
+    r for r in ALL_RULE_IDS if not r.startswith(("PRAGMA", "PARSE")))
+
+
+def run_all(ctx) -> List:
+    from tools.analyzer.rules import (concat_gather, determinism,
+                                      dtype_hygiene, trace_safety)
+    findings: List = []
+    for mod in (concat_gather, trace_safety, determinism, dtype_hygiene):
+        findings.extend(mod.run(ctx))
+    return findings

@@ -1,0 +1,210 @@
+"""Shared AST utilities for the rule passes: import-alias resolution,
+canonical dotted names, scope iteration and a deliberately simple
+forward taint propagation (two sweeps, so loop-carried assignments are
+seen without a full fixpoint)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# --------------------------------------------------------------------------
+# import aliases → canonical module paths
+# --------------------------------------------------------------------------
+
+_CANON = {
+    "jax.numpy": "jax.numpy",
+    "numpy": "numpy",
+}
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to canonical dotted paths: ``jnp`` → ``jax.numpy``,
+    ``np`` → ``numpy``, ``perf_counter`` → ``time.perf_counter`` …"""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname is None and "." in a.name:
+                    # `import jax.numpy` binds `jax`; the dotted use
+                    # resolves through attribute chains anyway
+                    out[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Canonical dotted name of an expression: ``jnp.concatenate`` with
+    ``import jax.numpy as jnp`` → ``jax.numpy.concatenate``. None for
+    anything that is not a plain name/attribute chain."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    base = aliases.get(cur.id, cur.id)
+    parts.append(base)
+    return ".".join(reversed(parts))
+
+
+# --------------------------------------------------------------------------
+# scopes
+# --------------------------------------------------------------------------
+
+
+def iter_scopes(tree: ast.Module) -> Iterator[Tuple[ast.AST,
+                                                    List[ast.stmt]]]:
+    """Yield (scope_node, statements) for the module and every function
+    (methods included). Each function is analyzed independently."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def scope_statements(body: List[ast.stmt]) -> Iterator[ast.stmt]:
+    """All statements in a scope, recursing into control flow but NOT
+    into nested function/class definitions (their own scopes)."""
+    for stmt in body:
+        yield stmt
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            if isinstance(child, ast.stmt):
+                yield from scope_statements([child])
+            elif hasattr(child, "body") and isinstance(
+                    getattr(child, "body", None), list):
+                yield from scope_statements(child.body)  # type: ignore
+
+
+def walk_scope(body: List[ast.stmt]) -> Iterator[ast.AST]:
+    """ast.walk over a scope's statements, excluding nested function /
+    class bodies (they are separate scopes). Top-level statements only —
+    the stack descent reaches nested statements exactly once."""
+    stack: List[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# reading these attributes of a traced array yields trace-STATIC host
+# values (shapes are concrete during tracing) — they don't carry taint
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "weak_type",
+                 "sharding"}
+
+
+def traced_names_in(node: ast.AST) -> Set[str]:
+    """Like ``names_in`` but a name reached only through a trace-static
+    attribute read (``x.shape[0]``, ``x.dtype``) does not count: those
+    are concrete at trace time, so branching on them is fine."""
+    out: Set[str] = set()
+    stack: List[ast.AST] = [node]
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, ast.Attribute) and cur.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(cur, ast.Name):
+            out.add(cur.id)
+        stack.extend(ast.iter_child_nodes(cur))
+    return out
+
+
+def assign_targets(stmt: ast.stmt) -> List[ast.expr]:
+    if isinstance(stmt, ast.Assign):
+        return stmt.targets
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+def target_names(target: ast.expr) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(target, ast.Name):
+        out.add(target.id)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            out |= target_names(elt)
+    elif isinstance(target, ast.Starred):
+        out |= target_names(target.value)
+    return out
+
+
+def propagate_taint(body: List[ast.stmt], seeds: Set[str],
+                    sweeps: int = 2, names_fn=None) -> Set[str]:
+    """Names (transitively) derived from ``seeds`` by assignment or
+    loop-target binding within this scope. Deliberately coarse: any
+    assignment whose RHS mentions a tainted name taints its targets.
+    ``names_fn`` customizes which references count (e.g.
+    ``traced_names_in`` ignores ``x.shape`` reads)."""
+    names_fn = names_fn or names_in
+    tainted = set(seeds)
+    for _ in range(sweeps):
+        for stmt in scope_statements(body):
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                if value is None:
+                    continue
+                if names_fn(value) & tainted:
+                    for tgt in assign_targets(stmt):
+                        tainted |= target_names(tgt)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                if names_fn(stmt.iter) & tainted:
+                    tainted |= target_names(stmt.target)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    if item.optional_vars is not None and \
+                            names_fn(item.context_expr) & tainted:
+                        tainted |= target_names(item.optional_vars)
+    return tainted
+
+
+def is_static_shape_expr(node: ast.AST) -> bool:
+    """True when a shape expression is trace-static by inspection:
+    constants, attribute reads (cfg.task_batch, x.shape[0]), ALL_CAPS
+    names, and arithmetic over those. A ``len(...)`` (or any other
+    call) makes it dynamic."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id.isupper() or node.id == "_"
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_static_shape_expr(e) for e in node.elts)
+    if isinstance(node, ast.BinOp):
+        return is_static_shape_expr(node.left) and \
+            is_static_shape_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return is_static_shape_expr(node.operand)
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] — attribute-rooted subscripts are static reads
+        return is_static_shape_expr(node.value)
+    return False
+
+
+def call_dtype_present(call: ast.Call, dtype_pos: int) -> bool:
+    """Whether an array-constructor call pins its dtype, positionally
+    (``np.zeros(0, np.float32)``) or by keyword."""
+    if any(kw.arg == "dtype" for kw in call.keywords):
+        return True
+    return len(call.args) > dtype_pos

@@ -1,0 +1,118 @@
+"""JCG001 — gather from a concatenate/pad result.
+
+The jax 0.4.x SPMD partitioner silently miscompiles gathers whose
+operand is ``concat([batch-sharded x, pad_row])`` under a mesh: the
+gather indices are partitioned against the *unconcatenated* sharding
+and rows land on the wrong shard (ROADMAP standing constraint; bitten
+in ``models/moe.py``, which is now pad-free). This pass does local
+dataflow per scope: names assigned from ``jnp.concatenate`` / ``jnp.pad``
+(and friends) are tainted, taint flows through assignments and through
+method calls on tainted values, and any ``take`` / ``take_along_axis``
+/ advanced (non-slice) subscript consuming a tainted value is flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.analyzer.rules import common
+
+RULE = "JCG001"
+
+_PRODUCERS = {
+    "jax.numpy.concatenate",
+    "jax.numpy.concat",
+    "jax.numpy.pad",
+    "jax.numpy.append",
+    "jax.numpy.hstack",
+    "jax.numpy.vstack",
+    "jax.numpy.stack",
+    "jax.lax.concatenate",
+    "jax.lax.pad",
+}
+
+_GATHER_FNS = {
+    "jax.numpy.take",
+    "jax.numpy.take_along_axis",
+    "jax.lax.gather",
+}
+
+_MSG = ("gather from a concatenate/pad result — the jax 0.4.x SPMD pass "
+        "silently miscompiles gathers whose operand is "
+        "concat([batch-sharded x, pad_row]) under a mesh")
+_HINT = ("rewrite pad-free (clamp indices into the real rows and mask, "
+         "as models/moe.py does) or audit the lowering under the target "
+         "mesh before shipping")
+
+
+def _is_producer_call(node: ast.AST, aliases) -> bool:
+    return (isinstance(node, ast.Call)
+            and common.dotted(node.func, aliases) in _PRODUCERS)
+
+
+def _taints(expr: ast.AST, tainted: Set[str], aliases) -> bool:
+    """Does this expression carry concat/pad provenance?"""
+    if _is_producer_call(expr, aliases):
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Attribute):
+        # xp.reshape(...) / xp.astype(...) keep provenance
+        return _taints(expr.func.value, tainted, aliases)
+    if isinstance(expr, ast.Attribute):
+        return _taints(expr.value, tainted, aliases)
+    if isinstance(expr, ast.Subscript):
+        # basic slicing of a concat result still aliases it
+        return _taints(expr.value, tainted, aliases)
+    return False
+
+
+def _is_advanced_index(sl: ast.AST) -> bool:
+    """Advanced (gather-lowering) indexing: any name/call/array in the
+    subscript. Pure constants and slices are static lowerings."""
+    if isinstance(sl, ast.Tuple):
+        return any(_is_advanced_index(e) for e in sl.elts)
+    if isinstance(sl, ast.Slice):
+        return False
+    if isinstance(sl, ast.Constant):
+        return False
+    if isinstance(sl, ast.UnaryOp):
+        return _is_advanced_index(sl.operand)
+    return True
+
+
+def run(ctx) -> List:
+    findings: List = []
+    aliases = common.import_aliases(ctx.tree)
+    for _scope, body in common.iter_scopes(ctx.tree):
+        # pass 1: which names hold concat/pad results (two sweeps so a
+        # re-binding later in a loop is still seen)
+        tainted: Set[str] = set()
+        for _ in range(2):
+            for stmt in common.scope_statements(body):
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    if stmt.value is not None and \
+                            _taints(stmt.value, tainted, aliases):
+                        for tgt in common.assign_targets(stmt):
+                            tainted |= common.target_names(tgt)
+        if not tainted and not any(
+                _is_producer_call(n, aliases)
+                for n in common.walk_scope(body)):
+            continue
+        # pass 2: gather-shaped consumers of tainted values
+        for node in common.walk_scope(body):
+            if isinstance(node, ast.Call):
+                fn = common.dotted(node.func, aliases)
+                if fn in _GATHER_FNS and node.args and \
+                        _taints(node.args[0], tainted, aliases):
+                    findings.append(ctx.finding(node, RULE, _MSG, _HINT))
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "take" and \
+                        _taints(node.func.value, tainted, aliases):
+                    findings.append(ctx.finding(node, RULE, _MSG, _HINT))
+            elif isinstance(node, ast.Subscript) and \
+                    isinstance(node.ctx, ast.Load):
+                if _taints(node.value, tainted, aliases) and \
+                        _is_advanced_index(node.slice):
+                    findings.append(ctx.finding(node, RULE, _MSG, _HINT))
+    return findings

@@ -1,0 +1,196 @@
+"""DET001–DET003 — determinism hazards.
+
+The codebase's core value proposition (bit-identical, replayable
+serving under preemption/rebalancing/chaos — the scheduler-trace pin)
+dies silently the first time one of these slips into a sim path.
+
+DET001  unseeded / global-state RNG: ``np.random.default_rng()`` with
+        no seed, legacy ``np.random.*`` module-level functions, stdlib
+        ``random.*`` module-level functions.
+DET002  wall-clock read: ``time.time`` / ``perf_counter`` /
+        ``monotonic`` / ``datetime.now`` … reaching code. Sim-clock
+        behavior must come from the event clock; wall-clock *reporting*
+        paths (launch/, benchmarks/, training loop timers) are
+        allowlisted in the analyzer config with written reasons.
+DET003  set-iteration order feeding decisions: iterating a set-typed
+        value (``for s in fan.pending``, ``list(pending)``, ``s.pop()``)
+        is hash/insertion-order dependent across processes and
+        versions. Scheduler/pool decisions must iterate ``sorted(...)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.analyzer.rules import common
+
+_LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "normal", "uniform",
+    "standard_normal", "seed", "poisson", "exponential", "beta",
+    "binomial", "gamma", "geometric",
+}
+
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "getrandbits", "choice",
+    "choices", "shuffle", "sample", "uniform", "triangular", "gauss",
+    "normalvariate", "seed", "betavariate", "expovariate",
+}
+
+_CLOCK_FNS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+# sinks whose result is insensitive to iteration order — safe on a set
+_ORDER_INSENSITIVE_SINKS = {
+    "sorted", "len", "sum", "min", "max", "any", "all", "set",
+    "frozenset",
+}
+# sinks that materialize the (arbitrary) iteration order
+_ORDER_SENSITIVE_SINKS = {"list", "tuple", "iter", "enumerate"}
+
+
+def _set_typed_locals(body, aliases) -> Set[str]:
+    """Names assigned a set within this scope."""
+    out: Set[str] = set()
+    for _ in range(2):
+        for stmt in common.scope_statements(body):
+            value = getattr(stmt, "value", None)
+            if value is None:
+                continue
+            if _is_set_expr(value, out, aliases):
+                for tgt in common.assign_targets(stmt):
+                    out |= common.target_names(tgt)
+    return out
+
+
+def _is_set_expr(expr: ast.AST, known: Set[str], aliases) -> bool:
+    if isinstance(expr, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(expr, ast.Call):
+        dn = common.dotted(expr.func, aliases)
+        if dn in {"set", "frozenset"}:
+            return True
+        if isinstance(expr.func, ast.Attribute) and expr.func.attr in {
+                "union", "intersection", "difference",
+                "symmetric_difference", "copy"}:
+            return _is_set_expr(expr.func.value, known, aliases)
+    if isinstance(expr, ast.Name):
+        return expr.id in known
+    if isinstance(expr, ast.BinOp) and isinstance(
+            expr.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _is_set_expr(expr.left, known, aliases) or \
+            _is_set_expr(expr.right, known, aliases)
+    return False
+
+
+def _set_attr_names(tree: ast.Module, aliases) -> Set[str]:
+    """Attribute names ever assigned a set anywhere in this module
+    (``self.pending = set(targets)`` ⇒ any ``X.pending`` is set-typed)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        for tgt in common.assign_targets(node) \
+                if isinstance(node, ast.stmt) else []:
+            value = getattr(node, "value", None)
+            if value is not None and isinstance(tgt, ast.Attribute) and \
+                    _is_set_expr(value, set(), aliases):
+                out.add(tgt.attr)
+    return out
+
+
+def _is_set_valued(expr: ast.AST, locals_: Set[str],
+                   attrs: Set[str], aliases) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in locals_
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in attrs
+    return _is_set_expr(expr, locals_, aliases)
+
+
+def run(ctx) -> List:
+    findings: List = []
+    aliases = common.import_aliases(ctx.tree)
+    set_attrs = _set_attr_names(ctx.tree, aliases)
+
+    # ---- DET001 / DET002: pure call-pattern scans -----------------------
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = common.dotted(node.func, aliases)
+        if dn is None:
+            continue
+        if dn in {"numpy.random.default_rng", "numpy.random.Generator",
+                  "numpy.random.RandomState"} and not node.args \
+                and not node.keywords:
+            findings.append(ctx.finding(
+                node, "DET001",
+                f"{dn}() with no seed: entropy from the OS makes every "
+                "run different",
+                "thread an explicit seed from the config (cfg.seed) or "
+                "derive one per-component from a root seed"))
+        elif dn.startswith("numpy.random.") and \
+                dn.rsplit(".", 1)[1] in _LEGACY_NP_RANDOM:
+            findings.append(ctx.finding(
+                node, "DET001",
+                f"legacy global-state RNG {dn}(): shared mutable state, "
+                "order-of-call dependent across the whole process",
+                "use a seeded np.random.default_rng(seed) instance "
+                "owned by the component"))
+        elif dn.startswith("random.") and \
+                dn.rsplit(".", 1)[1] in _STDLIB_RANDOM:
+            findings.append(ctx.finding(
+                node, "DET001",
+                f"stdlib global-state RNG {dn}(): shared mutable state, "
+                "order-of-call dependent",
+                "use a seeded random.Random(seed) or "
+                "np.random.default_rng(seed) instance"))
+        elif dn in _CLOCK_FNS:
+            findings.append(ctx.finding(
+                node, "DET002",
+                f"wall-clock read {dn}(): sim-clock / scheduling "
+                "behavior must come from the event clock, not the host",
+                "use the sim's event clock (now/t), or — for wall-clock "
+                "*reporting* of real work — allowlist the path in "
+                "tools/analyzer config with a reason"))
+
+    # ---- DET003: set iteration feeding order-sensitive sinks ------------
+    for _scope, body in common.iter_scopes(ctx.tree):
+        locals_ = _set_typed_locals(body, aliases)
+        if not locals_ and not set_attrs:
+            continue
+
+        def flag(node, what):
+            findings.append(ctx.finding(
+                node, "DET003",
+                f"{what} a set: iteration order is hash/insertion "
+                "dependent — ordering-sensitive scheduler/pool decisions "
+                "must not depend on it (scheduler-trace bit-identity pin)",
+                "iterate sorted(...) (or keep a list/dict) when order "
+                "can reach scheduling, dispatch or output"))
+
+        for node in common.walk_scope(body):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                if _is_set_valued(node.iter, locals_, set_attrs, aliases):
+                    flag(node, "iterating")
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_valued(gen.iter, locals_, set_attrs,
+                                      aliases):
+                        flag(node, "comprehending over")
+            elif isinstance(node, ast.Call):
+                dn = common.dotted(node.func, aliases)
+                if dn in _ORDER_SENSITIVE_SINKS and node.args and \
+                        _is_set_valued(node.args[0], locals_, set_attrs,
+                                       aliases):
+                    flag(node, f"{dn}() over")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "pop" and not node.args and \
+                        _is_set_valued(node.func.value, locals_,
+                                       set_attrs, aliases):
+                    flag(node, ".pop() from")
+    return findings

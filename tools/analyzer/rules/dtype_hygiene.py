@@ -1,0 +1,93 @@
+"""DTY001–DTY002 — dtype/shape hygiene.
+
+DTY001  default-float64 empty fallback: ``np.zeros(0)`` / ``np.empty(0)``
+        / ``np.ones(0)`` (and jnp spellings) with no dtype. NumPy
+        defaults these to float64, so the empty branch of a fallback
+        like ``np.asarray(xs) if xs else np.zeros(0)`` carries a
+        different dtype than the float32 data path it merges with —
+        downcast-on-concat, silent upcasts, and x64-flag-dependent
+        behavior follow (core/trinity_pool.py:131 was the in-repo
+        instance).
+DTY002  dtype-asymmetric conditional: a conditional expression whose
+        branches are both array constructors but only one pins a
+        dtype — the merged value's dtype depends on which branch ran.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.analyzer.rules import common
+
+# constructor → positional index where dtype may appear
+_CONSTRUCTORS = {
+    "numpy.zeros": 1, "numpy.ones": 1, "numpy.empty": 1,
+    "numpy.full": 2, "numpy.asarray": 1, "numpy.array": 1,
+    "jax.numpy.zeros": 1, "jax.numpy.ones": 1, "jax.numpy.empty": 1,
+    "jax.numpy.full": 2, "jax.numpy.asarray": 1, "jax.numpy.array": 1,
+}
+
+# constructors that allocate from a shape (flag when that shape is an
+# empty/zero-size literal and dtype is absent)
+_SHAPE_ALLOC = {"numpy.zeros", "numpy.ones", "numpy.empty",
+                "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.empty"}
+
+
+def _is_zero_size_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return node.value == 0
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts) == 0 or any(
+            isinstance(e, ast.Constant) and e.value == 0
+            for e in node.elts)
+    return False
+
+
+def _constructor(node: ast.AST, aliases) -> Optional[str]:
+    if isinstance(node, ast.Call):
+        dn = common.dotted(node.func, aliases)
+        if dn in _CONSTRUCTORS:
+            return dn
+    return None
+
+
+def _dtype_pinned(node: ast.Call, dn: str) -> bool:
+    return common.call_dtype_present(node, _CONSTRUCTORS[dn])
+
+
+def run(ctx) -> List:
+    findings: List = []
+    aliases = common.import_aliases(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        # --- DTY001: empty fallback without a dtype ----------------------
+        if isinstance(node, ast.Call):
+            dn = common.dotted(node.func, aliases)
+            if dn in _SHAPE_ALLOC and node.args and \
+                    _is_zero_size_literal(node.args[0]) and \
+                    not _dtype_pinned(node, dn):
+                findings.append(ctx.finding(
+                    node, "DTY001",
+                    f"{dn}({ast.unparse(node.args[0])}) defaults to "
+                    "float64: an empty fallback merged with a float32 "
+                    "data path changes dtype depending on which branch "
+                    "ran",
+                    "pin the dtype explicitly, e.g. "
+                    f"{dn.rsplit('.', 1)[1]}(0, dtype=np.float32) — "
+                    "match the non-empty branch"))
+        # --- DTY002: dtype-asymmetric conditional ------------------------
+        elif isinstance(node, ast.IfExp):
+            a, b = node.body, node.orelse
+            da = _constructor(a, aliases)
+            db = _constructor(b, aliases)
+            if da and db:
+                pa = _dtype_pinned(a, da)
+                pb = _dtype_pinned(b, db)
+                if pa != pb:
+                    unpinned = db if pa else da
+                    findings.append(ctx.finding(
+                        node, "DTY002",
+                        "conditional merges two array constructors but "
+                        f"only one pins a dtype ({unpinned} does not): "
+                        "the result's dtype depends on which branch ran",
+                        "pin the same dtype on both branches"))
+    return findings

@@ -1,0 +1,275 @@
+"""TRC001–TRC004 — trace-safety inside jitted functions.
+
+TRC001  host sync on a traced value: ``np.asarray(x)`` / ``np.array(x)``
+        / ``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` /
+        ``x.tolist()`` / ``x.block_until_ready()`` where ``x`` derives
+        from a jitted function's arguments. Forces a device→host
+        transfer (or a ConcretizationTypeError) on every call.
+TRC002  Python control flow on a traced value: ``if``/``while``/
+        ``assert`` whose test mentions a traced name. Either errors at
+        trace time or silently bakes one branch into the jaxpr.
+TRC003  closure-captured host array: a jitted function reads a
+        module-level ``np.array(...)``-like constant it does not take
+        as a parameter. The array is embedded into the jaxpr as a
+        constant — mutating it later silently does nothing, and fresh
+        array identities force re-traces.
+TRC004  variable-length array construction in a loop: ``jnp.zeros(
+        len(batch))``-style constructors inside ``for``/``while``
+        bodies whose shape depends on a call like ``len(...)``. Every
+        distinct length is a fresh trace; the repo's convention is to
+        pad to the next power of two instead.
+
+Jitted scopes are found through ``@jax.jit`` / ``@partial(jax.jit, …)``
+decorators and through ``f = jax.jit(g)`` rebinding (``g`` is then
+treated as jitted).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyzer.rules import common
+
+_JIT_FNS = {"jax.jit", "jax.pmap"}
+_PARTIAL_FNS = {"functools.partial", "partial"}
+
+_HOST_CONVERTERS = {"numpy.asarray", "numpy.array", "float", "int", "bool"}
+_HOST_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host"}
+
+_ARRAY_CONSTRUCTORS = {
+    "numpy.array", "numpy.asarray", "numpy.zeros", "numpy.ones",
+    "numpy.full", "numpy.arange", "numpy.linspace", "numpy.eye",
+    "jax.numpy.array", "jax.numpy.asarray", "jax.numpy.zeros",
+    "jax.numpy.ones", "jax.numpy.full", "jax.numpy.arange",
+    "jax.numpy.linspace", "jax.numpy.eye",
+}
+
+_JNP_SHAPED = {
+    "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.full",
+    "jax.numpy.empty", "jax.numpy.arange",
+}
+
+# parameters that by repo convention hold static host-side config, not
+# traced arrays
+_STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "mesh", "rng",
+                       "key_path", "axis_name"}
+
+
+def _is_jit_call(node: ast.AST, aliases) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    fn = common.dotted(node.func, aliases)
+    if fn in _JIT_FNS:
+        return True
+    if fn in _PARTIAL_FNS and node.args:
+        return common.dotted(node.args[0], aliases) in _JIT_FNS
+    return False
+
+
+def _static_argnames(call: ast.AST, fn: ast.AST) -> Set[str]:
+    """Params marked static in a jit call: ``static_argnames=(...)`` by
+    name, ``static_argnums=(...)`` resolved against the signature."""
+    out: Set[str] = set()
+    if not isinstance(call, ast.Call):
+        return out
+    ordered = [p.arg for p in
+               list(fn.args.posonlyargs) + list(fn.args.args)]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                              str):
+                    out.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and \
+                        isinstance(n.value, int) and \
+                        0 <= n.value < len(ordered):
+                    out.add(ordered[n.value])
+    return out
+
+
+def _jitted_functions(tree: ast.Module, aliases) -> List[Tuple[ast.AST,
+                                                               Set[str]]]:
+    """(FunctionDef-or-Lambda, static param names) pairs that run under
+    trace."""
+    jitted: List[ast.AST] = []
+    statics: Dict[int, Set[str]] = {}
+    by_name: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name[node.name] = node
+            for d in node.decorator_list:
+                if _is_jit_call(d, aliases) or \
+                        common.dotted(d, aliases) in _JIT_FNS:
+                    jitted.append(node)
+                    statics[id(node)] = _static_argnames(d, node)
+                    break
+    # f = jax.jit(g)  /  self._fn = jax.jit(g)  → g is jitted
+    for node in ast.walk(tree):
+        if _is_jit_call(node, aliases):
+            call = node  # type: ast.Call
+            args = [a for a in call.args
+                    if not isinstance(a, ast.Starred)]
+            if common.dotted(call.func, aliases) in _PARTIAL_FNS:
+                target = args[1] if len(args) > 1 else None
+            else:
+                target = args[0] if args else None
+            if isinstance(target, ast.Name) and target.id in by_name:
+                fn = by_name[target.id]
+                if fn not in jitted:
+                    jitted.append(fn)
+                    statics[id(fn)] = _static_argnames(call, fn)
+            elif isinstance(target, ast.Lambda):
+                jitted.append(target)
+                statics[id(target)] = _static_argnames(call, target)
+    return [(fn, statics.get(id(fn), set())) for fn in jitted]
+
+
+def _params(fn: ast.AST, static: Set[str]) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names
+            if n not in _STATIC_PARAM_NAMES and n not in static}
+
+
+def _module_array_constants(tree: ast.Module, aliases) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in tree.body:
+        for tgt in common.assign_targets(stmt):
+            value = getattr(stmt, "value", None)
+            if isinstance(value, ast.Call) and \
+                    common.dotted(value.func, aliases) \
+                    in _ARRAY_CONSTRUCTORS:
+                out |= common.target_names(tgt)
+    return out
+
+
+def run(ctx) -> List:
+    findings: List = []
+    aliases = common.import_aliases(ctx.tree)
+    module_arrays = _module_array_constants(ctx.tree, aliases)
+
+    for fn, static in _jitted_functions(ctx.tree, aliases):
+        body = fn.body if isinstance(fn.body, list) else [
+            ast.Expr(value=fn.body)]
+        params = _params(fn, static)
+        tainted = common.propagate_taint(
+            body, params, names_fn=common.traced_names_in)
+        locals_: Set[str] = set(params) | static | {
+            n for s in common.scope_statements(body)
+            for t in common.assign_targets(s)
+            for n in common.target_names(t)}
+
+        for node in common.walk_scope(body):
+            # --- TRC001: host syncs -------------------------------------
+            if isinstance(node, ast.Call):
+                dn = common.dotted(node.func, aliases)
+                if dn in _HOST_CONVERTERS and node.args and \
+                        common.traced_names_in(node.args[0]) & tainted:
+                    findings.append(ctx.finding(
+                        node, "TRC001",
+                        f"host sync inside a jitted function: {dn}() on a "
+                        "traced value forces a device→host transfer (or a "
+                        "ConcretizationTypeError) at every call",
+                        "keep the computation on-device (jnp ops), or "
+                        "hoist the conversion out of the jitted function"))
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _HOST_METHODS and \
+                        common.traced_names_in(node.func.value) & tainted:
+                    findings.append(ctx.finding(
+                        node, "TRC001",
+                        "host sync inside a jitted function: "
+                        f".{node.func.attr}() on a traced value",
+                        "return the array and convert outside the jit "
+                        "boundary"))
+            # --- TRC002: control flow on traced values ------------------
+            elif isinstance(node, (ast.If, ast.While)):
+                if common.traced_names_in(node.test) & tainted:
+                    findings.append(ctx.finding(
+                        node, "TRC002",
+                        "Python branch on a traced value inside a jitted "
+                        "function: concretizes the tracer (error) or bakes "
+                        "one branch into the jaxpr",
+                        "use jnp.where / jax.lax.cond / jax.lax.select "
+                        "instead of a Python if"))
+            elif isinstance(node, ast.Assert):
+                if common.traced_names_in(node.test) & tainted:
+                    findings.append(ctx.finding(
+                        node, "TRC002",
+                        "assert on a traced value inside a jitted "
+                        "function: concretizes the tracer",
+                        "use checkify or move the assert outside the jit "
+                        "boundary"))
+            # --- TRC003: closure-captured host arrays -------------------
+            elif isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load):
+                if node.id in module_arrays and node.id not in locals_:
+                    findings.append(ctx.finding(
+                        node, "TRC003",
+                        f"jitted function closes over host array "
+                        f"'{node.id}': it is baked into the jaxpr as a "
+                        "constant, so later mutation silently does "
+                        "nothing and fresh identities force re-traces",
+                        "pass the array as an argument (donate or mark "
+                        "static as appropriate)"))
+
+    # --- TRC004: variable-length jnp construction in loops (any scope,
+    # jitted or not — recompiles bite as soon as the result reaches a
+    # jitted consumer) ----------------------------------------------------
+    for _scope, body in common.iter_scopes(ctx.tree):
+        for node in common.walk_scope(body):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = common.dotted(node.func, aliases)
+            if dn not in _JNP_SHAPED:
+                continue
+            shape: Optional[ast.AST] = None
+            if node.args:
+                shape = node.args[0]
+            for kw in node.keywords:
+                if kw.arg == "shape":
+                    shape = kw.value
+            if shape is not None and _inside_loop(body, node) and \
+                    _contains_call(shape):
+                findings.append(ctx.finding(
+                    node, "TRC004",
+                    f"variable-length {dn}() inside a loop: every "
+                    "distinct shape is a fresh trace/compile once it "
+                    "reaches a jitted consumer",
+                    "pad to the next power of two (repo convention) or "
+                    "hoist a fixed-capacity buffer out of the loop"))
+    return _dedupe(findings)
+
+
+def _inside_loop(body, target: ast.AST) -> bool:
+    """Is ``target`` nested under a for/while within this scope?"""
+    for stmt in common.scope_statements(body):
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            for sub in ast.walk(stmt):
+                if sub is target:
+                    return True
+    return False
+
+
+def _contains_call(shape: ast.AST) -> bool:
+    """A ``len(...)`` (or any other call) in a shape expression makes
+    the shape data-dependent; names alone are too often trace-static
+    (``T, d = x.shape``) to flag."""
+    return any(isinstance(n, ast.Call) for n in ast.walk(shape))
+
+
+def _dedupe(findings: List) -> List:
+    seen = set()
+    out = []
+    for f in findings:
+        key = (f.rule, f.line, f.col)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
