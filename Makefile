@@ -7,8 +7,8 @@ PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
 	bench-cache bench-sharded bench-rebalance bench-chaos bench-chaos-smoke \
-	trace-check docs docs-check linkcheck analyze analyze-baseline \
-	verify-sanitized
+	bench-dispatch bench-dispatch-smoke bench-summary trace-check docs \
+	docs-check linkcheck analyze analyze-baseline verify-sanitized
 
 verify:
 	$(PYTEST) -q -m "not slow"
@@ -44,6 +44,22 @@ bench-chaos:
 # written to a temp file instead of benchmarks/BENCH_chaos.json
 bench-chaos-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_chaos --smoke
+
+# dispatch-pipeline knob arms (megabatch × device merge × double buffer)
+# with per-request bit-equality asserted against the legacy path
+bench-dispatch:
+	PYTHONPATH=src python -m benchmarks.bench_dispatch_pipeline
+
+# shrunk dispatch run for CI: S=2 only, same bit-equality asserts, no
+# speedup gate, report written to a temp file
+bench-dispatch-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_dispatch_pipeline --smoke \
+		--out /tmp/BENCH_dispatch_smoke.json
+
+# aggregate every benchmarks/BENCH_*.json headline metric into
+# benchmarks/BENCH_summary.json (the cross-PR perf trajectory)
+bench-summary:
+	PYTHONPATH=src python tools/bench_summary.py
 
 trace-check:
 	PYTHONPATH=src:tests python -m scheduler_trace_driver --check

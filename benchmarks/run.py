@@ -11,11 +11,11 @@ import argparse
 import time
 
 from benchmarks import (bench_architectures, bench_chaos,
-                        bench_continuous_batching, bench_engine_dispatch,
-                        bench_preemption, bench_rebalance,
-                        bench_recall_latency, bench_roofline_stages,
-                        bench_scheduler, bench_semantic_cache,
-                        bench_sharded)
+                        bench_continuous_batching, bench_dispatch_pipeline,
+                        bench_engine_dispatch, bench_preemption,
+                        bench_rebalance, bench_recall_latency,
+                        bench_roofline_stages, bench_scheduler,
+                        bench_semantic_cache, bench_sharded)
 
 BENCHES = {
     "fig1_roofline_stages": bench_roofline_stages.run,
@@ -29,6 +29,7 @@ BENCHES = {
     "supp_sharded": bench_sharded.run,
     "supp_rebalance": bench_rebalance.run,
     "supp_chaos": bench_chaos.run,
+    "supp_dispatch": bench_dispatch_pipeline.run,
 }
 
 

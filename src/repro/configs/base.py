@@ -215,6 +215,33 @@ class VectorPoolConfig:
     # distance over several sub-centroids instead of one mean
     shard_route_centroids: int = 4
     cache_replication: int = 2  # min replicas on shards holding cache rows
+    # megabatched cross-shard dispatch: the sharded pool steps every
+    # replica sitting at the clock frontier through ONE vmapped
+    # extend_multi dispatch over stacked per-lane engine state (a
+    # (G, R, …) leading layout) instead of one dispatch + sync per
+    # replica — per-lane math is bit-identical to serial stepping
+    # (asserted in tests/test_dispatch_pipeline.py). Off = the serial
+    # per-replica legacy path, bit-identical to PR 4
+    megabatch_enabled: bool = True
+    # on-device partial-top-k merge: completing per-shard children fold
+    # their (top_m,) partial lists — shard-local→global id translation
+    # included as a jitted gather over the partition table — into a
+    # preallocated per-parent device buffer; one device top_k finalizes
+    # the parent and the host syncs only the merged (top_k,) ids+dists
+    # instead of S partial lists. Requires megabatch_enabled; off = the
+    # host-side merge_partial_topk legacy path
+    device_merge_enabled: bool = True
+    # double-buffered chunks: the megabatched extend for chunk N is
+    # dispatched asynchronously and the host runs next-round scheduling
+    # work (pending-arrival release, controller updates) BEFORE syncing
+    # chunk N's completion masks, overlapping host bookkeeping with
+    # device compute. Rescue snapshots, preemption and chaos kills still
+    # land at chunk boundaries. Requires megabatch_enabled
+    double_buffer_enabled: bool = True
+    # device merge-buffer rows: concurrent fan-out parents that can hold
+    # device-side partial results at once; overflow parents fall back to
+    # the host merge for that request (correct, just slower)
+    merge_buffer_rows: int = 256
     # per-replica index row capacity (HBM model): a replica whose index
     # (frozen + cache segments) exceeds this refuses to build — the signal
     # that a corpus must be sharded. 0 = unlimited

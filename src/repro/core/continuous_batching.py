@@ -713,3 +713,577 @@ class ContinuousBatchingEngine:
         """Mean fraction of request slots active per launch (comparable to
         the lockstep baseline's live-query fraction)."""
         return self.total_live_slots / max(self.steps * self.cfg.max_requests, 1)
+
+
+# ---------------------------------------------------------------------------
+# megabatched cross-shard dispatch: grouped (lane-stacked) engine state
+# ---------------------------------------------------------------------------
+#
+# Since PR 4 every shard's frozen segment is padded to one common shape, so
+# all shard engines share ONE compiled program — which means their per-lane
+# EngineState pytrees stack into a (G, R, …) layout and a single vmapped
+# ``_extend_impl`` advances every lane in ONE device dispatch. The grouped
+# jitted functions below mirror their per-engine counterparts exactly;
+# per-lane math is bit-identical to serial stepping (vmap adds a batch
+# dimension, it does not reassociate the per-lane reductions — asserted in
+# tests/test_dispatch_pipeline.py), and lanes outside the stepping cohort
+# are frozen bit-wise by a ``jnp.where`` over the group-active mask.
+
+
+def _seed_request_g(dbs, g, qvec, entry_key, entry_lo, entry_hi, *,
+                    top_m: int, visited_slots: int, num_entries: int,
+                    metric: str):
+    """``_seed_request`` against lane ``g`` of the stacked (G, N, d) index.
+    ``dbs[g, entries]`` gathers only the sampled rows — indexing the lane
+    first would materialise a (B, N, d) copy under vmap."""
+    entries = jax.random.randint(entry_key, (num_entries,), entry_lo,
+                                 entry_hi)
+    x = dbs[g, entries].astype(jnp.float32)
+    q = qvec[None].astype(jnp.float32)
+    if metric == "l2":
+        d = jnp.sum((x - q) ** 2, axis=-1)
+    elif metric == "ip":
+        d = -jnp.sum(x * q, axis=-1)
+    else:
+        raise ValueError(f"unknown metric: {metric!r}")
+    pad = top_m - num_entries
+    ids = jnp.concatenate([entries.astype(jnp.int32),
+                           jnp.full((pad,), -1, jnp.int32)])
+    dists = jnp.concatenate([d, jnp.full((pad,), INF)])
+    visited_row = jnp.full((visited_slots,), -1, jnp.int32)
+    visited_row, _ = _hash_probe(visited_row, entries.astype(jnp.int32))
+    return ids, dists, visited_row
+
+
+@functools.partial(jax.jit, static_argnames=("num_entries", "metric"),
+                   donate_argnums=(0,))
+def admit_many_group(state: EngineState, dbs, g_idx, slots, qvecs,
+                     entry_keys, entry_los, entry_his, budgets,
+                     num_entries: int = 16, metric: str = "l2"):
+    """``admit_many`` over stacked lane state: one vmapped seeding + one
+    scatter at (lane, slot) pairs covers every cohort member's flush.
+    Batches are power-of-two padded by replicating entry 0 (duplicate
+    scatters write identical values). Seeded values are bit-identical to
+    the per-engine ``admit_many`` — both paths run ``_seed_request``'s ops
+    on the same rows."""
+    M = state.top_ids.shape[2]
+    V = state.visited.shape[2]
+    seed = functools.partial(_seed_request_g, top_m=M, visited_slots=V,
+                             num_entries=num_entries, metric=metric)
+    ids, dists, visited_rows = jax.vmap(
+        lambda g, q, k, lo, hi: seed(dbs, g, q, k, lo, hi))(
+        g_idx, qvecs, entry_keys, entry_los, entry_his)
+    B, Mw = ids.shape
+    return EngineState(
+        query_vecs=state.query_vecs.at[g_idx, slots].set(qvecs),
+        top_ids=state.top_ids.at[g_idx, slots].set(ids),
+        top_dists=state.top_dists.at[g_idx, slots].set(dists),
+        expanded=state.expanded.at[g_idx, slots].set(
+            jnp.zeros((B, Mw), bool)),
+        visited=state.visited.at[g_idx, slots].set(visited_rows),
+        active=state.active.at[g_idx, slots].set(True),
+        extends=state.extends.at[g_idx, slots].set(
+            jnp.zeros((B,), jnp.int32)),
+        budget=state.budget.at[g_idx, slots].set(budgets),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def evict_slots_group(state: EngineState, g_idx, slots):
+    """``evict_slots`` at (lane, slot) pairs: gather the full rows and
+    deactivate them. Row order matches ``SlotCheckpoint`` fields."""
+    rows = (state.query_vecs[g_idx, slots], state.top_ids[g_idx, slots],
+            state.top_dists[g_idx, slots], state.expanded[g_idx, slots],
+            state.visited[g_idx, slots], state.extends[g_idx, slots],
+            state.budget[g_idx, slots])
+    new_state = dataclasses.replace(
+        state, active=state.active.at[g_idx, slots].set(False))
+    return new_state, rows
+
+
+@jax.jit
+def snapshot_slots_group(state: EngineState, g_idx, slots):
+    """Non-destructive grouped gather of full slot rows (checkpoint
+    rescue: ONE dispatch + sync covers every cohort member's in-flight
+    slots instead of one per replica)."""
+    return (state.query_vecs[g_idx, slots], state.top_ids[g_idx, slots],
+            state.top_dists[g_idx, slots], state.expanded[g_idx, slots],
+            state.visited[g_idx, slots], state.extends[g_idx, slots],
+            state.budget[g_idx, slots])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def restore_slots_group(state: EngineState, g_idx, slots, query_vecs,
+                        top_ids, top_dists, expanded, visited, extends,
+                        budgets):
+    """Grouped ``restore_slots``: scatter checkpointed rows back into
+    (lane, slot) pairs and reactivate them."""
+    return EngineState(
+        query_vecs=state.query_vecs.at[g_idx, slots].set(query_vecs),
+        top_ids=state.top_ids.at[g_idx, slots].set(top_ids),
+        top_dists=state.top_dists.at[g_idx, slots].set(top_dists),
+        expanded=state.expanded.at[g_idx, slots].set(expanded),
+        visited=state.visited.at[g_idx, slots].set(visited),
+        active=state.active.at[g_idx, slots].set(True),
+        extends=state.extends.at[g_idx, slots].set(extends),
+        budget=state.budget.at[g_idx, slots].set(budgets),
+    )
+
+
+@jax.jit
+def collect_slots_group(state: EngineState, g_idx, slots):
+    """Completion collection: gather ONLY the result columns (top ids,
+    top dists, extend counts) of finishing (lane, slot) pairs — one
+    transfer per collected chunk instead of three full-state ``np.asarray``
+    pulls per completing engine (the PR-8 satellite)."""
+    return (state.top_ids[g_idx, slots], state.top_dists[g_idx, slots],
+            state.extends[g_idx, slots])
+
+
+@jax.jit
+def collect_extends_group(state: EngineState, g_idx, slots):
+    """Extend-count-only gather: with the on-device merge, a search
+    child's ids/dists stay device handles — the host needs ONLY its
+    extends count (fan-out accounting), a (B,) transfer."""
+    return state.extends[g_idx, slots]
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "p", "use_pallas",
+                                             "task_batch", "metric",
+                                             "distance_mode"),
+                   donate_argnums=(0,))
+def extend_multi_group(state: EngineState, dbs, graphs, group_active, *,
+                       num_steps: int, p: int, task_batch: int,
+                       use_pallas: bool = False, metric: str = "l2",
+                       distance_mode: str = "slot_gather"):
+    """K fused extend steps over EVERY lane in one dispatch: a
+    ``lax.scan`` whose body vmaps ``_extend_impl`` across the stacked
+    (G, R, …) state with per-lane (N, d) index arrays. Lanes outside
+    ``group_active`` still compute (the batch shape is fixed) but their
+    state is frozen bit-wise by the trailing ``where`` — masked-lane
+    wasted compute buys one dispatch + one sync for the whole cohort.
+
+    Returns (state, completed (K, G, R) bool, tasks (K, G) int32)."""
+
+    def one(st, db, graph):
+        return _extend_impl(st, db, graph, p=p, task_batch=task_batch,
+                            use_pallas=use_pallas, metric=metric,
+                            distance_mode=distance_mode)
+
+    def body(st, _):
+        new, completed, tasks = jax.vmap(one)(st, dbs, graphs)
+        frozen = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                group_active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new, st)
+        completed = completed & group_active[:, None]
+        tasks = jnp.where(group_active, tasks, 0)
+        return frozen, (completed, tasks)
+
+    state, (completed_k, tasks_k) = jax.lax.scan(
+        body, state, None, length=num_steps)
+    return state, completed_k, tasks_k
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _set_lane_index(dbs, graphs, g, db, graph):
+    """Copy one lane's grown index arrays into the stacked (G, N, d) /
+    (G, N, D) buffers. Unlike the per-engine ``set_index`` (a pointer
+    swap), the grouped layout pays a lane-sized copy per insert broadcast
+    — the price of keeping every lane inside one compiled program."""
+    n = db.shape[0]
+    return dbs.at[g, :n].set(db), graphs.at[g, :n].set(graph)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _deactivate_lane(state: EngineState, g):
+    """Free a whole lane (member removal): deactivating every slot is
+    enough — admission fully resets per-slot state on lane reuse, and
+    inactive slots never touch the math (same as freed slots in the
+    per-engine path)."""
+    return dataclasses.replace(state, active=state.active.at[g].set(False))
+
+
+def _pow2_pad(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class GroupEngine:
+    """Owner of the stacked per-lane device state for megabatched
+    dispatch: lane-stacked ``EngineState`` (G, R, …) plus stacked index
+    arrays (G, N, d) / (G, N, D). Lanes have a free-list lifecycle —
+    removing a member just deactivates its lane, adding one reuses a free
+    lane (admission resets slot state) — and capacity doubles O(log)
+    times along both the lane axis and the row axis (online inserts
+    growing a shard past the common row budget)."""
+
+    def __init__(self, cfg, use_pallas: Optional[bool] = None):
+        self.cfg = cfg
+        self.use_pallas = (jax.default_backend() == "tpu"
+                           if use_pallas is None else use_pallas)
+        self.state: Optional[EngineState] = None
+        self.dbs = None
+        self.graphs = None
+        self.g_cap = 0
+        self.n_max = 0
+        self._free_lanes: List[int] = []
+        self.members: dict = {}  # lane -> GroupMember
+
+    # ------------------------------------------------------ lane lifecycle
+    def _grow_lanes(self, want: int):
+        new_cap = max(4, self.g_cap)
+        while new_cap < want:
+            new_cap *= 2
+        add = new_cap - self.g_cap
+        if add <= 0:
+            return
+        init = init_engine_state(self.cfg)
+        fresh = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (add,) + x.shape), init)
+        if self.state is None:
+            self.state = jax.tree_util.tree_map(jnp.array, fresh)
+            self.dbs = jnp.zeros((new_cap, max(self.n_max, 1),
+                                  self.cfg.dim), jnp.float32)
+            self.graphs = jnp.full((new_cap, max(self.n_max, 1),
+                                    self.cfg.graph_degree), -1, jnp.int32)
+            self.n_max = max(self.n_max, 1)
+        else:
+            self.state = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                self.state, fresh)
+            self.dbs = jnp.concatenate(
+                [self.dbs, jnp.zeros((add,) + self.dbs.shape[1:],
+                                     self.dbs.dtype)], axis=0)
+            self.graphs = jnp.concatenate(
+                [self.graphs, jnp.full((add,) + self.graphs.shape[1:], -1,
+                                       jnp.int32)], axis=0)
+        self._free_lanes = list(range(new_cap - 1, self.g_cap - 1, -1)) \
+            + self._free_lanes
+        self.g_cap = new_cap
+
+    def _ensure_rows(self, n: int):
+        if n <= self.n_max:
+            return
+        new_n = max(self.n_max, 1)
+        while new_n < n:
+            new_n *= 2
+        pad = new_n - self.n_max
+        self.dbs = jnp.concatenate(
+            [self.dbs, jnp.zeros((self.g_cap, pad, self.cfg.dim),
+                                 jnp.float32)], axis=1)
+        self.graphs = jnp.concatenate(
+            [self.graphs, jnp.full((self.g_cap, pad,
+                                    self.cfg.graph_degree), -1, jnp.int32)],
+            axis=1)
+        self.n_max = new_n
+
+    def add_member(self, index, seed: int) -> "GroupMember":
+        if not self._free_lanes:
+            self._grow_lanes(self.g_cap + 1)
+        lane = self._free_lanes.pop()
+        self.write_lane_index(lane, index.db, index.graph)
+        member = GroupMember(self, lane, index, seed)
+        self.members[lane] = member
+        return member
+
+    def free_lane(self, lane: int):
+        self.members.pop(lane, None)
+        self.state = _deactivate_lane(self.state, jnp.int32(lane))
+        self._free_lanes.append(lane)
+
+    def write_lane_index(self, lane: int, db, graph):
+        self._ensure_rows(db.shape[0])
+        self.dbs, self.graphs = _set_lane_index(
+            self.dbs, self.graphs, jnp.int32(lane), jnp.asarray(db),
+            jnp.asarray(graph))
+
+    # --------------------------------------------------------- device ops
+    def _pad_pairs(self, entries):
+        """(lane, slot) pairs → power-of-two padded device index arrays
+        (padding replicates entry 0: duplicate gathers/scatters are
+        safe)."""
+        B = len(entries)
+        padded = list(entries) + [entries[0]] * (_pow2_pad(B) - B)
+        g_idx = jnp.asarray(np.asarray([g for g, _ in padded], np.int32))
+        slots = jnp.asarray(np.asarray([s for _, s in padded], np.int32))
+        return g_idx, slots
+
+    def dispatch_admits(self, staged: List[dict]):
+        """ONE ``admit_many_group`` dispatch covering every staged member
+        flush (see ``GroupMember.stage_admit_batch``)."""
+        staged = [s for s in staged if len(s["slots"])]
+        if not staged:
+            return
+        entries = [(s["g"], slot) for s in staged for slot in s["slots"]]
+        g_idx, slots = self._pad_pairs(entries)
+        B = len(entries)
+        pad = _pow2_pad(B) - B
+        cat = lambda key: np.concatenate([s[key] for s in staged])
+        qvecs = cat("qvecs")
+        keys = [k for s in staged for k in s["keys"]]
+        qvecs_p = np.concatenate([qvecs, qvecs[:1].repeat(pad, 0)]) \
+            if pad else qvecs
+        keys_p = jnp.stack(keys + keys[:1] * pad)
+        pick = lambda key: jnp.asarray(np.concatenate(
+            [cat(key), cat(key)[:1].repeat(pad, 0)]) if pad else cat(key))
+        cfgv = self.cfg
+        self.state = admit_many_group(
+            self.state, self.dbs, g_idx, slots, jnp.asarray(qvecs_p),
+            keys_p, pick("los"), pick("his"), pick("buds"),
+            num_entries=min(16, cfgv.top_m // 2), metric=cfgv.metric)
+
+    def dispatch_restores(self, staged: List[dict]):
+        """ONE ``restore_slots_group`` dispatch for every staged member
+        resume batch (see ``GroupMember.stage_resume_batch``)."""
+        staged = [s for s in staged if len(s["slots"])]
+        if not staged:
+            return
+        entries = [(s["g"], slot) for s in staged for slot in s["slots"]]
+        g_idx, slots = self._pad_pairs(entries)
+        B = len(entries)
+        pad = _pow2_pad(B) - B
+        def cat(key):
+            x = np.concatenate([s[key] for s in staged])
+            return jnp.asarray(np.concatenate([x, x[:1].repeat(pad, 0)])
+                               if pad else x)
+        self.state = restore_slots_group(
+            self.state, g_idx, slots, cat("qv"), cat("ids"), cat("dists"),
+            cat("exp"), cat("vis"), cat("ext"), cat("bud"))
+
+    def step_lanes(self, lanes: List[int], num_steps: int):
+        """K fused extend steps for the cohort ``lanes`` — ONE dispatch,
+        one mask sync. Returns host (completed (K, G, R), tasks (K, G));
+        lanes outside the cohort are frozen bit-wise."""
+        mask = np.zeros((self.g_cap,), bool)
+        mask[lanes] = True
+        cfgv = self.cfg
+        self.state, completed_k, tasks_k = extend_multi_group(
+            self.state, self.dbs, self.graphs, jnp.asarray(mask),
+            num_steps=num_steps, p=cfgv.parents_per_step,
+            task_batch=cfgv.task_batch, use_pallas=self.use_pallas,
+            metric=cfgv.metric, distance_mode=cfgv.distance_mode)
+        return jax.device_get((completed_k, tasks_k))
+
+    def step_lanes_async(self, lanes: List[int], num_steps: int):
+        """Double-buffered variant: dispatch the cohort chunk and return
+        the UN-synced device arrays — the caller overlaps next-round host
+        scheduling before blocking on them (``jax.device_get``)."""
+        mask = np.zeros((self.g_cap,), bool)
+        mask[lanes] = True
+        cfgv = self.cfg
+        self.state, completed_k, tasks_k = extend_multi_group(
+            self.state, self.dbs, self.graphs, jnp.asarray(mask),
+            num_steps=num_steps, p=cfgv.parents_per_step,
+            task_batch=cfgv.task_batch, use_pallas=self.use_pallas,
+            metric=cfgv.metric, distance_mode=cfgv.distance_mode)
+        return completed_k, tasks_k
+
+    def collect_rows(self, entries):
+        """Gather (top_ids (B, M), top_dists (B, M), extends (B,)) for
+        finishing (lane, slot) pairs — one dispatch + one sync for ALL
+        completions of a chunk."""
+        if not entries:
+            return (np.zeros((0, self.cfg.top_m), np.int32),
+                    np.zeros((0, self.cfg.top_m), np.float32),
+                    np.zeros((0,), np.int32))
+        g_idx, slots = self._pad_pairs(entries)
+        ids, dists, ext = jax.device_get(
+            collect_slots_group(self.state, g_idx, slots))
+        B = len(entries)
+        return (np.asarray(ids)[:B], np.asarray(dists)[:B],
+                np.asarray(ext)[:B])
+
+    def gather_checkpoint_rows(self, entries):
+        """Full-row snapshot gather for (lane, slot) pairs (grouped
+        checkpoint rescue) — returns host arrays ordered like
+        ``SlotCheckpoint`` fields, one sync for the whole cohort."""
+        g_idx, slots = self._pad_pairs(entries)
+        rows = jax.device_get(snapshot_slots_group(self.state, g_idx,
+                                                   slots))
+        B = len(entries)
+        return tuple(np.asarray(r)[:B] for r in rows)
+
+
+class GroupMember(ContinuousBatchingEngine):
+    """Engine facade over one lane of a :class:`GroupEngine`: the exact
+    ``ContinuousBatchingEngine`` host bookkeeping (freelist, slot→rid
+    maps, per-request PRNG keys, metrics) with every device op routed
+    through the shared stacked state. Pool code (cancel, hedging, kill
+    rescue, replica moves) works unchanged against this API."""
+
+    def __init__(self, group: GroupEngine, lane: int, index, seed: int):
+        # deliberately NOT calling super().__init__: the lane owns no
+        # private device arrays — state and index live in the group stacks
+        self.group = group
+        self.lane = lane
+        self.cfg = group.cfg
+        self.corpus_n = index.corpus_n
+        self.free_slots = list(range(group.cfg.max_requests))[::-1]
+        self.slot_request = {}
+        self.slot_topk = {}
+        self.use_pallas = group.use_pallas
+        self.distance_mode = group.cfg.distance_mode
+        self.extend_chunk = max(1, group.cfg.extend_chunk)
+        self._key = jax.random.PRNGKey(seed)
+        self.total_tasks = 0
+        self.total_capacity = 0
+        self.total_live_slots = 0
+        self.steps = 0
+
+    # ------------------------------------------------------- admission
+    def stage_admit_batch(self, requests) -> dict:
+        """Host half of ``admit_batch``: pop slots, fold per-request PRNG
+        keys, resolve per-slot params — returns the staged device args
+        WITHOUT dispatching, so the pool can fold every cohort member's
+        flush into one ``admit_many_group`` call."""
+        requests = [r if len(r) == 3 else (r[0], r[1], None)
+                    for r in requests]
+        B = len(requests)
+        assert B <= len(self.free_slots), (B, len(self.free_slots))
+        slots = [self.free_slots.pop() for _ in range(B)]
+        subs = [self._entry_key(rid) for rid, _, _ in requests]
+        resolved = [self._resolve_params(p) for _, _, p in requests]
+        for slot, (rid, _, _), (_, _, _, top_k) in zip(slots, requests,
+                                                       resolved):
+            self.slot_request[slot] = rid
+            if top_k is not None:
+                self.slot_topk[slot] = top_k
+        pcols = np.asarray([r[:3] for r in resolved], np.int32) \
+            if resolved else np.zeros((0, 3), np.int32)
+        return {
+            "g": self.lane,
+            "slots": slots,
+            "qvecs": (np.stack([np.asarray(q, np.float32)
+                                for _, q, _ in requests]) if requests
+                      else np.zeros((0, self.cfg.dim), np.float32)),
+            "keys": subs,
+            "los": pcols[:, 0], "his": pcols[:, 1], "buds": pcols[:, 2],
+        }
+
+    def admit_batch(self, requests) -> List[int]:
+        if not requests:
+            return []
+        staged = self.stage_admit_batch(requests)
+        self.group.dispatch_admits([staged])
+        return staged["slots"]
+
+    def admit(self, request_id, qvec,
+              params: Optional[SlotParams] = None) -> int:
+        return self.admit_batch([(request_id, qvec, params)])[0]
+
+    def stage_resume_batch(self, items) -> dict:
+        """Host half of ``resume_batch`` (checkpointed re-seating): pop
+        slots + stack checkpoint rows, dispatch deferred to the group."""
+        B = len(items)
+        assert B <= len(self.free_slots), (B, len(self.free_slots))
+        slots = [self.free_slots.pop() for _ in range(B)]
+        for slot, (rid, ckpt) in zip(slots, items):
+            self.slot_request[slot] = rid
+            top_k = getattr(ckpt, "top_k", None)
+            if top_k is not None:
+                self.slot_topk[slot] = top_k
+        stack = lambda f: np.stack([f(c) for _, c in items])
+        return {
+            "g": self.lane, "slots": slots,
+            "qv": stack(lambda c: np.asarray(c.query_vec, np.float32)),
+            "ids": stack(lambda c: np.asarray(c.top_ids, np.int32)),
+            "dists": stack(lambda c: np.asarray(c.top_dists, np.float32)),
+            "exp": stack(lambda c: np.asarray(c.expanded, bool)),
+            "vis": stack(lambda c: np.asarray(c.visited, np.int32)),
+            "ext": stack(lambda c: np.int32(c.extends)),
+            "bud": stack(lambda c: np.int32(getattr(c, "budget", 0))),
+        }
+
+    def resume_batch(self, items) -> List[int]:
+        if not items:
+            return []
+        staged = self.stage_resume_batch(items)
+        self.group.dispatch_restores([staged])
+        return staged["slots"]
+
+    # ------------------------------------------------------ index updates
+    def set_index(self, db, graph, corpus_rows: Optional[int] = None):
+        self.group.write_lane_index(self.lane, db, graph)
+        if corpus_rows is not None:
+            self.corpus_n = corpus_rows
+
+    # ------------------------------------------- preemption / checkpoints
+    def preempt(self, request_ids) -> List[Tuple[int, SlotCheckpoint]]:
+        if not request_ids:
+            return []
+        slot_of = {rid: slot for slot, rid in self.slot_request.items()}
+        slots = [slot_of[rid] for rid in request_ids]
+        g_idx, slots_p = self.group._pad_pairs(
+            [(self.lane, s) for s in slots])
+        self.group.state, rows = evict_slots_group(self.group.state, g_idx,
+                                                   slots_p)
+        rows = jax.device_get(rows)
+        qv, ids, dists, exp, vis, ext, bud = (np.asarray(r) for r in rows)
+        out = []
+        for i, (rid, slot) in enumerate(zip(request_ids, slots)):
+            out.append((rid, SlotCheckpoint(
+                query_vec=qv[i].copy(), top_ids=ids[i].copy(),
+                top_dists=dists[i].copy(), expanded=exp[i].copy(),
+                visited=vis[i].copy(), extends=int(ext[i]),
+                budget=int(bud[i]), top_k=self.slot_topk.pop(slot, None))))
+            del self.slot_request[slot]
+            self.free_slots.append(slot)
+        return out
+
+    def snapshot(self, request_ids) -> List[Tuple[int, SlotCheckpoint]]:
+        if not request_ids:
+            return []
+        slot_of = {rid: slot for slot, rid in self.slot_request.items()}
+        slots = [slot_of[rid] for rid in request_ids]
+        qv, ids, dists, exp, vis, ext, bud = \
+            self.group.gather_checkpoint_rows([(self.lane, s)
+                                               for s in slots])
+        out = []
+        for i, (rid, slot) in enumerate(zip(request_ids, slots)):
+            out.append((rid, SlotCheckpoint(
+                query_vec=qv[i].copy(), top_ids=ids[i].copy(),
+                top_dists=dists[i].copy(), expanded=exp[i].copy(),
+                visited=vis[i].copy(), extends=int(ext[i]),
+                budget=int(bud[i]), top_k=self.slot_topk.get(slot, None))))
+        return out
+
+    # ----------------------------------------------------------- stepping
+    def collect_completions(self, completed_k: np.ndarray,
+                            rows=None, row_offset: int = 0):
+        """Turn this lane's (K, R) completion masks into the legacy
+        ``step_multi`` tuples. ``rows`` (pre-gathered (ids, dists, ext)
+        host arrays starting at ``row_offset``) lets the pool share ONE
+        ``collect_rows`` sync across the whole cohort; None gathers just
+        this lane's completions."""
+        entries = [(i, int(slot)) for i in range(completed_k.shape[0])
+                   for slot in np.nonzero(completed_k[i])[0]]
+        if rows is None:
+            rows = self.group.collect_rows(
+                [(self.lane, s) for _, s in entries])
+            row_offset = 0
+        ids, dists, ext = rows
+        out = []
+        for j, (i, slot) in enumerate(entries):
+            rid = self.slot_request.pop(slot)
+            kk = self.slot_topk.pop(slot, self.cfg.top_k)
+            r = row_offset + j
+            out.append((rid, ids[r, :kk].copy(), dists[r, :kk].copy(),
+                        int(ext[r]), i))
+            self.free_slots.append(slot)
+        return out
+
+    def step_multi(self, num_steps: Optional[int] = None):
+        k = self.extend_chunk if num_steps is None else num_steps
+        live = self.num_active
+        completed_k, tasks_k = self.group.step_lanes([self.lane], k)
+        ck = completed_k[:, self.lane]
+        tk = np.ascontiguousarray(tasks_k[:, self.lane])
+        self.total_tasks += int(tk.sum())
+        self.total_capacity += k * self.cfg.task_batch
+        self.steps += k
+        per_step_completions = ck.sum(axis=1)
+        for i in range(k):
+            self.total_live_slots += live
+            live -= int(per_step_completions[i])
+        out = self.collect_completions(ck) if ck.any() else []
+        return out, tk

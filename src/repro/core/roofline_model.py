@@ -95,6 +95,24 @@ def extend_time(pool_cfg, hw: Hardware = V5E, active_tasks: int | None = None) -
     return hw.launch_floor + max(mem, flops)
 
 
+def extend_time_group(pool_cfg, cohort: int, double_buffer: bool = False,
+                      hw: Hardware = V5E) -> float:
+    """Per-member extend time inside a megabatched cohort: ``cohort``
+    lanes share ONE fixed-shape dispatch, so the launch floor (a host-side
+    per-dispatch cost) amortises across them while each lane still pays
+    its own memory/compute term. With double buffering the host dispatch
+    work overlaps the previous chunk's device compute, so the per-step
+    cost is the max of the two instead of their sum. ``cohort=1`` without
+    double buffering reduces exactly to :func:`extend_time`."""
+    T = pool_cfg.task_batch
+    d = pool_cfg.dim
+    mem = T * d * 4 / hw.hbm_bw
+    flops = 2.0 * T * d / hw.peak_flops
+    dev = max(mem, flops)
+    host = hw.launch_floor / max(cohort, 1)
+    return max(host, dev) if double_buffer else host + dev
+
+
 def per_request_batch_search_time(pool_cfg, batch: int, max_extends: int,
                                   hw: Hardware = V5E) -> float:
     """Baseline: lockstep batch pays the *max* extend count (stragglers)."""

@@ -69,11 +69,17 @@ import heapq
 import math
 from typing import Dict, List, Optional, Set
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import roofline_model
 from repro.core.continuous_batching import (ContinuousBatchingEngine,
-                                            SlotParams)
+                                            GroupEngine, SlotCheckpoint,
+                                            SlotParams, _pow2_pad,
+                                            collect_extends_group,
+                                            collect_slots_group)
+from repro.kernels.ops import finalize_partial_topk, fold_partial_topk
 from repro.core.scheduler import (ControllerFeedback, TwoQueueScheduler,
                                   VectorRequest)
 # CapacityError is raised at construction (frozen rows over budget) and at
@@ -172,12 +178,15 @@ class ShardLoad:
 
 
 class _Replica:
-    def __init__(self, rid: int, cfg, index: OnlineIndex, use_pallas, seed):
+    def __init__(self, rid: int, cfg, index: OnlineIndex, use_pallas, seed,
+                 engine: Optional[ContinuousBatchingEngine] = None):
         self.rid = rid
-        self.engine = ContinuousBatchingEngine(cfg, index.db, index.graph,
-                                               use_pallas=use_pallas,
-                                               seed=seed,
-                                               corpus_rows=index.corpus_n)
+        # megabatched pools inject a GroupMember (a lane of the shared
+        # stacked state) instead of a private engine
+        self.engine = engine if engine is not None else \
+            ContinuousBatchingEngine(cfg, index.db, index.graph,
+                                     use_pallas=use_pallas, seed=seed,
+                                     corpus_rows=index.corpus_n)
         self.shard = -1  # owning shard (sharded pools; −1 = monolithic)
         self.clock = 0.0
         self.ext_latency_ewma = roofline_model.extend_time(cfg)
@@ -195,7 +204,7 @@ class _Fanout:
     children: pending shard set + per-shard partial results."""
 
     __slots__ = ("parent", "pending", "ids", "dists", "extends", "t_done",
-                 "t_admitted")
+                 "t_admitted", "buf_row", "kk", "host")
 
     def __init__(self, parent: VectorRequest, targets: Set[int]):
         self.parent = parent
@@ -205,6 +214,14 @@ class _Fanout:
         self.extends = 0
         self.t_done = -np.inf
         self.t_admitted: Optional[float] = None
+        # on-device merge (cfg.device_merge_enabled): the preallocated
+        # merge-buffer row this fan's children fold into (None = host
+        # path), the per-child top-k truncation, and the sticky
+        # buffer-overflow fallback flag (a fan merges EITHER fully on
+        # device or fully on host — never mixed)
+        self.buf_row: Optional[int] = None
+        self.kk: Optional[int] = None
+        self.host = False
 
 
 class VectorPool:
@@ -741,6 +758,32 @@ class ShardedVectorPool(VectorPool):
             # shard's resolve(), or children of a custom class would
             # KeyError on shards 1..S-1
             sch.classes = self.scheduler.classes
+        # megabatched cross-shard dispatch (cfg.megabatch_enabled): all
+        # shard replicas become lanes of ONE GroupEngine — the whole
+        # clock-frontier cohort steps via one grouped dispatch per chunk.
+        # device_merge / double_buffer stack on top; knobs off = the
+        # legacy serial per-replica path, bit-identical.
+        self._mega = bool(getattr(cfg, "megabatch_enabled", False))
+        self._device_merge = self._mega and bool(
+            getattr(cfg, "device_merge_enabled", False))
+        self._double_buffer = self._mega and bool(
+            getattr(cfg, "double_buffer_enabled", False))
+        self._group = GroupEngine(cfg, self._use_pallas) if self._mega \
+            else None
+        # device-side shard-local→global id translation table (S, T):
+        # refreshed lazily before a fold whenever a shard's gid map
+        # mutated (insert/migrate/loss/restore)
+        self._trans = None
+        self._trans_cap = 0
+        self._trans_dirty: Set[int] = set(range(S))
+        self._buf_free: List[int] = []  # clean merge-buffer rows
+        self._buf_dirty: List[int] = []  # rows parked by failed/cancelled fans
+        if self._device_merge:
+            P = max(1, int(getattr(cfg, "merge_buffer_rows", 256)))
+            self._buf_ids = jnp.full((P, S, cfg.top_m), -1, jnp.int32)
+            self._buf_dists = jnp.full((P, S, cfg.top_m),
+                                       jnp.float32(1e30))
+            self._buf_free = list(range(P - 1, -1, -1))
         self.replicas: List[_Replica] = []
         self._next_rid = 0
         for s in range(S):
@@ -766,8 +809,10 @@ class ShardedVectorPool(VectorPool):
         # exactly the static pool's (bit-identical legacy path)
         eng_seed = self._seed + (s if self.cfg.rebalance_enabled
                                  else self._next_rid)
+        eng = self._group.add_member(self.shards.shards[s], eng_seed) \
+            if self._mega else None
         rep = _Replica(self._next_rid, self.cfg, self.shards.shards[s],
-                       self._use_pallas, eng_seed)
+                       self._use_pallas, eng_seed, engine=eng)
         rep.shard = s
         # join at the clock frontier (min), not the busiest replica's
         # horizon: a replacement spawned while some replica is stuck in a
@@ -858,6 +903,7 @@ class ShardedVectorPool(VectorPool):
             self._cache_backup[gid] = (np.array(vec, np.float32, copy=True),
                                        float(t_now))
         self.metrics.inserts += 1
+        self._trans_dirty.add(s)  # gid map mutated: device trans row stale
         self._broadcast_shard(s)
         return gid
 
@@ -974,6 +1020,12 @@ class ShardedVectorPool(VectorPool):
     def _finalize(self, fan: _Fanout):
         from repro.kernels.ops import merge_partial_topk
 
+        if fan.buf_row is not None:
+            # a device-merging fan diverted to the host finalize path
+            # (failed parent): its buffer row holds partial folds — park
+            # it dirty; the next grouped finalize dispatch clears it
+            self._buf_dirty.append(fan.buf_row)
+            fan.buf_row = None
         parent = fan.parent
         if parent.failed:
             # some child exhausted its retry cap: the logical request
@@ -1079,6 +1131,361 @@ class ShardedVectorPool(VectorPool):
                 self.schedulers[s].submit(twin)
                 self.metrics.hedges += 1
 
+    # ------------------------------------------------ megabatched stepping
+    def run_until(self, t_end: float):
+        """Megabatched run loop (``cfg.megabatch_enabled``): instead of
+        stepping the min-clock replica alone, the whole clock-frontier
+        COHORT — every replica sharing the min clock, i.e. all shards'
+        ready children — advances through ONE grouped dispatch per chunk.
+        Knob off: the inherited serial per-replica loop, bit-identical."""
+        if not self._mega:
+            return super().run_until(t_end)
+        while True:
+            t_min = min(r.clock for r in self.replicas)
+            if t_min >= t_end:
+                break
+            self._release_pending(t_min)
+            cohort = [r for r in self.replicas if r.clock == t_min]
+            self._step_group(cohort, t_end)
+        self._maybe_scale(t_end)
+
+    def _step_group(self, cohort: List[_Replica], t_end: float):
+        """Advance every frontier replica one fused chunk via grouped
+        dispatches. Per-member host scheduling mirrors ``_step_replica``
+        in the same replica order; then ONE grouped admit scatter, ONE
+        restore scatter, ONE K-step extend over the whole cohort, and one
+        bundled completion sync. Per-member chunk time comes from
+        ``roofline_model.extend_time_group``: the dispatch launch floor
+        amortises across the cohort (and overlaps device compute entirely
+        under double buffering)."""
+        t = cohort[0].clock
+        cfg = self.cfg
+        # pass 1: per-member bookkeeping (controller, health, hedging,
+        # rebalancing, preemption) — preemption's urgent re-admit still
+        # dispatches immediately (rare path; correctness over batching)
+        healthy = {}
+        for rep in cohort:
+            self._sched_for(rep).controller.maybe_update(t, self.feedback)
+            healthy[id(rep)] = self._healthy(rep)
+            self._maybe_hedge(rep, t)
+            if healthy[id(rep)]:
+                self._maybe_rebalance(rep, t)
+                self._maybe_preempt(rep, t)
+        # a rebalance can move a cohort-mate: drop removed members (the
+        # replacement joined at the frontier and steps next round)
+        cohort = [r for r in cohort if r in self.replicas]
+        # pass 2: scheduler flushes, STAGED (host half only) so every
+        # member's admissions fold into one grouped scatter
+        admit_stages, resume_stages = [], []
+        for rep in cohort:
+            sched = self._sched_for(rep)
+            free = rep.engine.num_free
+            if not healthy[id(rep)] or \
+                    not sched.should_flush(t, free, rep.engine.num_active):
+                continue
+            batch = sched.select(free, t)
+            if not batch:
+                continue
+            fresh = [r for r in batch if r.checkpoint is None]
+            resumed = [r for r in batch if r.checkpoint is not None]
+            if fresh:
+                admit_stages.append(rep.engine.stage_admit_batch(
+                    [(r.rid, r.qvec, self._params_for(r, rep))
+                     for r in fresh]))
+            if resumed:
+                resume_stages.append(rep.engine.stage_resume_batch(
+                    [(r.rid, r.checkpoint) for r in resumed]))
+                for req in resumed:
+                    req.checkpoint = None
+                self.metrics.resumes += len(resumed)
+            for req in batch:
+                rep.in_flight[req.rid] = req
+        self._group.dispatch_admits(admit_stages)
+        self._group.dispatch_restores(resume_stages)
+        # idle members jump their clocks exactly like the serial path
+        lanes = []
+        for rep in cohort:
+            if rep.engine.num_active > 0:
+                lanes.append(rep)
+                continue
+            sched = self._sched_for(rep)
+            if sched.queued() > 0:
+                rep.clock = t + sched.controller.tau_pre
+            elif self._pending:
+                rep.clock = max(t + 1e-9, min(self._pending[0][0], t_end))
+            else:
+                rep.clock = t_end
+        if not lanes:
+            return
+        # ONE grouped dispatch: K extend steps over the whole cohort
+        k = lanes[0].engine.extend_chunk
+        pending_dev = self._group.step_lanes_async(
+            [rep.engine.lane for rep in lanes], k)
+        dt_base = roofline_model.extend_time_group(cfg, len(lanes),
+                                                   self._double_buffer)
+        dt_of = {}
+        for rep in lanes:
+            dt = dt_base * rep.slowdown
+            dt_of[id(rep)] = dt
+            rep.clock = t + k * dt
+            rep.ext_latency_ewma = 0.9 * rep.ext_latency_ewma + 0.1 * dt
+            self._sched_for(rep).observe_extend_latency(dt)
+            self.metrics.extend_steps += k
+            self.metrics.tasks_capacity += k * cfg.task_batch
+        if self._double_buffer:
+            # double-buffered chunks: the grouped extend is in flight on
+            # device — run the next round's host-side arrival release
+            # BEFORE blocking on the completion masks (sim-time prices
+            # the overlap as max(host, dev) in extend_time_group)
+            self._release_pending(min(r.clock for r in self.replicas))
+        completed_k, tasks_k = jax.device_get(pending_dev)
+        # per-member engine/pool counters (mirrors step_multi exactly)
+        records = []
+        for rep in lanes:
+            eng = rep.engine
+            ck = completed_k[:, eng.lane]
+            tk = tasks_k[:, eng.lane]
+            self.metrics.tasks_emitted += int(tk.sum())
+            eng.total_tasks += int(tk.sum())
+            eng.total_capacity += k * cfg.task_batch
+            eng.steps += k
+            live = eng.num_active
+            per_step = ck.sum(axis=1)
+            for i in range(k):
+                eng.total_live_slots += live
+                live -= int(per_step[i])
+            if not ck.any():
+                continue
+            for i in range(k):
+                for slot in np.nonzero(ck[i])[0]:
+                    slot = int(slot)
+                    rid = eng.slot_request.pop(slot)
+                    kk = eng.slot_topk.pop(slot, cfg.top_k)
+                    eng.free_slots.append(slot)
+                    records.append([rep, rid, kk, i, slot, "host"])
+        if records and self._device_merge:
+            # a completing insert REWRITES its shard's gid map (cache
+            # eviction can re-home a row), and the legacy serial loop
+            # translates every later sibling against the post-insert map —
+            # split the chunk at insert boundaries so each segment's fold
+            # uses exactly the translation table legacy would have seen
+            seg = []
+            for rec in records:
+                seg.append(rec)
+                if rec[0].in_flight[rec[1]].kind == "insert":
+                    self._scan_chunk_completions(seg, t, dt_of)
+                    seg = []
+            records = seg
+        if records:
+            self._scan_chunk_completions(records, t, dt_of)
+        # grouped rescue snapshots: one gather + sync for the cohort
+        if cfg.rescue_enabled:
+            self._refresh_snapshots(lanes)
+
+    def _scan_chunk_completions(self, records, t: float, dt_of):
+        """Completion processing for one grouped chunk, in three phases.
+
+        Phase A (host) routes each completion: device fold (search child
+        of a live fan, device merge on, buffer row available), host
+        collect (inserts + buffer-overflow fallback + device merge off),
+        or drop (hedge-loser duplicates — no data needed); and predicts
+        which merge rows finalize this chunk. Phase B dispatches ONE fold
+        scatter, ONE finalize top-k, the host-route row gather and the
+        extends gather, then syncs ONCE. Phase C runs the legacy
+        bookkeeping per completion in serial order; device-merged parents
+        take their (k,) results straight from the finalize output."""
+        cfg = self.cfg
+        fold_entries, fold_rows, fold_cols = [], [], []
+        host_pos = {}  # record index -> host gather row
+        claimed: Set[tuple] = set()
+        accepted: Dict[int, Set[int]] = {}
+        for ridx, rec in enumerate(records):
+            rep, rid, kk, _i, slot, _route = rec
+            req = rep.in_flight[rid]
+            if not self._device_merge or req.kind == "insert":
+                host_pos[ridx] = len(host_pos)
+                continue
+            fan = self._fanout.get(req.parent_rid) \
+                if req.parent_rid is not None else None
+            s = req.shard
+            if fan is None or s not in fan.pending \
+                    or (req.parent_rid, s) in claimed:
+                rec[5] = "drop"
+                continue
+            claimed.add((req.parent_rid, s))
+            if fan.buf_row is None and not fan.host:
+                if self._buf_free:
+                    fan.buf_row = self._buf_free.pop()
+                else:
+                    fan.host = True  # buffer exhausted: sticky host path
+            if fan.buf_row is None:
+                host_pos[ridx] = len(host_pos)
+                continue
+            rec[5] = "dev"
+            if fan.kk is None:
+                fan.kk = kk
+            fold_entries.append((rep.engine.lane, slot))
+            fold_rows.append(fan.buf_row)
+            fold_cols.append(s)
+            accepted.setdefault(req.parent_rid, set()).add(s)
+        finalize = [self._fanout[prid] for prid, accs in accepted.items()
+                    if not (self._fanout[prid].pending - accs)
+                    and not self._fanout[prid].parent.failed]
+
+        def pad1(xs):
+            pad = _pow2_pad(len(xs)) - len(xs)
+            return jnp.asarray(np.asarray(xs + xs[:1] * pad, np.int32))
+
+        if fold_entries:
+            self._refresh_trans()
+            g_idx, slots_p = self._group._pad_pairs(fold_entries)
+            self._buf_ids, self._buf_dists = fold_partial_topk(
+                self._buf_ids, self._buf_dists, self._group.state.top_ids,
+                self._group.state.top_dists, self._trans, g_idx, slots_p,
+                pad1(fold_rows), pad1(fold_cols))
+        host_rows_dev = None
+        if host_pos:
+            g_idx, slots_p = self._group._pad_pairs(
+                [(records[j][0].engine.lane, records[j][4])
+                 for j in host_pos])
+            host_rows_dev = collect_slots_group(self._group.state, g_idx,
+                                                slots_p)
+        ext_dev = None
+        if len(host_pos) < len(records):
+            g_idx, slots_p = self._group._pad_pairs(
+                [(rec[0].engine.lane, rec[4]) for rec in records])
+            ext_dev = collect_extends_group(self._group.state, g_idx,
+                                            slots_p)
+        fin_dev = None
+        rows_f = [fan.buf_row for fan in finalize] + self._buf_dirty
+        if rows_f:
+            self._buf_ids, self._buf_dists, fin_ids, fin_d = \
+                finalize_partial_topk(self._buf_ids, self._buf_dists,
+                                      pad1(rows_f), k=cfg.top_m)
+            fin_dev = (fin_ids, fin_d)
+            self._buf_dirty = []
+        # the ONE bundled host-device sync for this chunk's results
+        host_rows, ext_all, fin_out = jax.device_get(
+            (host_rows_dev, ext_dev, fin_dev))
+        fin_index = {fan.buf_row: i for i, fan in enumerate(finalize)}
+        for ridx, rec in enumerate(records):
+            rep, rid, kk, i, slot, route = rec
+            req = rep.in_flight.pop(rid)
+            req.t_completed = t + (i + 1) * dt_of[id(rep)]
+            if route == "host":
+                pos = host_pos[ridx]
+                ids, dists, ext = host_rows
+                req.extends_used = int(ext[pos])
+                req.result_ids = ids[pos, :kk].copy()
+                req.result_dists = dists[pos, :kk].copy()
+                self._on_complete(req, rep)
+                continue
+            req.extends_used = int(ext_all[ridx])
+            if route == "drop":
+                self._on_complete(req, rep)  # legacy hedge-drop branch
+                continue
+            fan = self._fold_child_device(req, kk)
+            if fan is None or fan.pending:
+                continue
+            self._fanout.pop(req.parent_rid)
+            parent = fan.parent
+            if parent.failed or fan.buf_row is None:
+                self._finalize(fan)
+                continue
+            pos = fin_index[fan.buf_row]
+            parent.result_ids = fin_out[0][pos, :fan.kk].copy()
+            parent.result_dists = fin_out[1][pos, :fan.kk].copy()
+            self.metrics.merges += 1
+            parent.t_completed = fan.t_done
+            parent.extends_used = fan.extends
+            parent.t_admitted = fan.t_admitted
+            self.metrics.completed.append(parent)
+            self._buf_free.append(fan.buf_row)
+            fan.buf_row = None
+
+    def _fold_child_device(self, req: VectorRequest, kk: int):
+        """Host half of a device-folded child completion: the exact
+        hedge-dedup/cancel + fan-out bookkeeping of ``_on_complete``,
+        minus the result-array fold (already scattered into the fan's
+        merge-buffer row device-side). Returns the fan (None on the
+        defensive orphan branch)."""
+        self.metrics.preempt_time += req.resume_wait
+        s = req.shard
+        fan = self._fanout.get(req.parent_rid)
+        if fan is None or s not in fan.pending:  # pragma: no cover
+            self.metrics.hedges_wasted += 1
+            return None
+        base_rid = (req.rid & ~self.HEDGE_BIT) if req.hedge else req.rid
+        twin_rid = self._hedged.pop(base_rid, None)
+        if twin_rid is not None:
+            if req.hedge:
+                self.metrics.hedges_won += 1
+            loser = base_rid if req.hedge else twin_rid
+            if self._cancel_child(loser, s):
+                self.metrics.hedges_wasted += 1
+        waits = self.metrics.shard_waits.setdefault(s, [])
+        waits.append(req.wait)
+        del waits[:-256]
+        if fan.kk is None:
+            fan.kk = kk
+        fan.extends += req.extends_used
+        fan.t_done = max(fan.t_done, req.t_completed)
+        if req.t_admitted is not None:
+            fan.t_admitted = (req.t_admitted if fan.t_admitted is None
+                              else min(fan.t_admitted, req.t_admitted))
+        fan.pending.discard(s)
+        return fan
+
+    def _refresh_trans(self):
+        """(Re)build the device (S, T) shard-local→global id table for
+        the fold op. Row width is power-of-two padded so the fold keeps
+        one compiled shape across cache growth; a full host rebuild + one
+        transfer only happens when some shard's gid map mutated (inserts,
+        migrations, losses — never on the probe hot path)."""
+        if self._trans is not None and not self._trans_dirty:
+            return
+        S = self.shards.num_shards
+        need = max(max((len(self.shards.global_map(s)) for s in range(S)),
+                       default=1), 1)
+        cap = max(self._trans_cap, 1)
+        # ≥1 trailing −1 sentinel column: the fold op clips out-of-range
+        # local ids to the last column, which must map to −1 exactly like
+        # the host ``to_global``
+        while cap < need + 1:
+            cap *= 2
+        self._trans_cap = cap
+        tbl = np.full((S, cap), -1, np.int32)
+        for s in range(S):
+            g = np.asarray(self.shards.global_map(s))
+            tbl[s, :len(g)] = g.astype(np.int32)
+        self._trans = jnp.asarray(tbl)
+        self._trans_dirty.clear()
+
+    def _refresh_snapshots(self, lanes: List[_Replica]):
+        """Grouped death-rescue snapshot refresh: ONE full-row gather +
+        sync covers every cohort member's in-flight slots (the serial
+        path pays one per replica)."""
+        entries, keys = [], []
+        for rep in lanes:
+            rep.snapshots = {}
+            if not rep.in_flight:
+                continue
+            slot_of = {r: s for s, r in rep.engine.slot_request.items()}
+            for rid in sorted(rep.in_flight):
+                entries.append((rep.engine.lane, slot_of[rid]))
+                keys.append((rep, rid, slot_of[rid]))
+        if not entries:
+            return
+        qv, ids, dists, exp, vis, ext, bud = \
+            self._group.gather_checkpoint_rows(entries)
+        for j, (rep, rid, slot) in enumerate(keys):
+            rep.snapshots[rid] = SlotCheckpoint(
+                query_vec=qv[j].copy(), top_ids=ids[j].copy(),
+                top_dists=dists[j].copy(), expanded=exp[j].copy(),
+                visited=vis[j].copy(), extends=int(ext[j]),
+                budget=int(bud[j]),
+                top_k=rep.engine.slot_topk.get(slot))
+
     # --------------------------------------------------------- membership
     def _born_at(self, row: int) -> Optional[float]:
         # Fresh gids do NOT make the slot-reuse guard redundant: child
@@ -1111,8 +1518,11 @@ class ShardedVectorPool(VectorPool):
         a shard left with NO replica is immediately re-homed on a fresh
         one, so queued (shard-portable) checkpoints and re-queued children
         keep a serving path."""
-        s = self.replicas[idx].shard
+        victim = self.replicas[idx]
+        s = victim.shard
         super().kill_replica(idx)
+        if self._mega:
+            self._group.free_lane(victim.engine.lane)
         if not self.shard_replicas(s):
             self._add_shard_replica(s)
             self.metrics.shard_reassignments += 1
@@ -1138,6 +1548,9 @@ class ShardedVectorPool(VectorPool):
         fan = self._fanout.pop(rid, None)
         if fan is None:
             return False
+        if fan.buf_row is not None:  # cancelled mid-merge: row is dirty
+            self._buf_dirty.append(fan.buf_row)
+            fan.buf_row = None
         for s in sorted(fan.pending):
             crid = self._child_rid(rid, s)
             self._cancel_child(crid, s)
@@ -1176,6 +1589,7 @@ class ShardedVectorPool(VectorPool):
                 req.checkpoint = None
                 req.extends_done = 0
         lost = self.shards.drop_shard_cache(s)
+        self._trans_dirty.add(s)
         # kill by identity: kill_replica auto-re-homes a fresh replica
         # when the shard empties, and that replacement must survive
         for rep in victims:
@@ -1196,6 +1610,7 @@ class ShardedVectorPool(VectorPool):
         vecs = np.stack([self._cache_backup[g][0] for g in lost])
         born = [self._cache_backup[g][1] for g in lost]
         evicted = self.shards.restore_entries(dst, lost, vecs, born, t_now=t)
+        self._trans_dirty.add(dst)
         for gone in evicted:
             self.cache_meta.pop(gone, None)
             self._cache_backup.pop(gone, None)
@@ -1305,6 +1720,8 @@ class ShardedVectorPool(VectorPool):
                 # moved child must stay evictable for truly urgent work
                 req.preemptions -= 1
         self.replicas.remove(donor)
+        if self._mega:
+            self._group.free_lane(donor.engine.lane)
         new = self._add_shard_replica(dst)
         new.clock = max(new.clock, donor.clock)
         self.metrics.rebalances += 1
@@ -1353,6 +1770,7 @@ class ShardedVectorPool(VectorPool):
         dst = min(recips, key=lambda s: (occ[s], s))
         moved, evicted = self.shards.migrate_entries(donor, dst, batch,
                                                      t_now=t)
+        self._trans_dirty.update((donor, dst))
         for gone in evicted:
             self.cache_meta.pop(gone, None)
             self._cache_backup.pop(gone, None)

@@ -55,6 +55,45 @@ def merge_partial_topk(ids, dists, *, k: int):
     return out_ids, out_d
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def fold_partial_topk(buf_ids, buf_dists, top_ids, top_dists, trans, g_idx,
+                      slots, rows, cols):
+    """On-device scatter–gather fold (PR 8): a completing per-shard child
+    writes its (M,) partial top list straight into its parent's
+    preallocated merge-buffer row, with shard-local→global id translation
+    folded in as a gather over the partition table — the host never sees
+    the S partial lists.
+
+    buf_ids/buf_dists (P, S, M) — per-parent device merge buffers (−1 /
+    +INF = empty); top_ids/top_dists (G, R, M) — the grouped engine state
+    the children finished in; trans (S, T) int32 — per-shard local row →
+    global id (−1 = tombstoned, matching host ``to_global``); g_idx/slots
+    (B,) — each child's (lane, slot); rows/cols (B,) — its parent's buffer
+    row and its shard column. Batches are power-of-two padded by
+    replicating entry 0 (duplicate writes scatter identical values).
+    Returns the updated buffers."""
+    cid = top_ids[g_idx, slots]  # (B, M) shard-local ids
+    cd = top_dists[g_idx, slots]
+    safe = jnp.clip(cid, 0, trans.shape[1] - 1)
+    gid = jnp.where(cid >= 0, trans[cols[:, None], safe], -1)
+    return buf_ids.at[rows, cols].set(gid), buf_dists.at[rows, cols].set(cd)
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1))
+def finalize_partial_topk(buf_ids, buf_dists, rows_f, *, k: int):
+    """Finish the parents whose merge-buffer rows are complete: ONE
+    ``top_k`` per row over the (S, M) partial pool (the device half of
+    ``merge_partial_topk`` — identical merge math, so the result matches
+    the host path bit-for-bit on tie-free data), then clear the rows for
+    reuse. The host syncs only the merged (F, k) ids+dists. ``rows_f`` is
+    power-of-two padded by replicating entry 0 (re-merging/re-clearing a
+    row is idempotent). Returns (buf_ids, buf_dists, merged_ids,
+    merged_dists)."""
+    m_ids, m_d = merge_partial_topk(buf_ids[rows_f], buf_dists[rows_f], k=k)
+    return (buf_ids.at[rows_f].set(-1), buf_dists.at[rows_f].set(_INF),
+            m_ids, m_d)
+
+
 def distance_tasks(db, queries, task_ids, task_slot, metric: str = "l2",
                    task_block: int = 256, mode: str = "slot_gather"):
     return _dist.distance_tasks(db, queries, task_ids, task_slot,

@@ -88,6 +88,10 @@ class PoolSanitizer:
     def _wrap_pool(self):
         pool = self.pool
         self._wrap(pool, "_step_replica", self._around_step)
+        if hasattr(pool, "_step_group"):
+            # megabatched cohort stepping (ShardedVectorPool, PR 8):
+            # the clock/completion checks land per cohort member
+            self._wrap(pool, "_step_group", self._around_step_group)
         self._wrap(pool, "kill_replica", self._around_kill)
         self._wrap(pool, "run_until", self._around_run_until)
         if hasattr(pool, "_move_replica"):
@@ -118,6 +122,21 @@ class PoolSanitizer:
                 f"replica rid={rep.rid} clock moved backwards: "
                 f"{high:.9f} -> {rep.clock:.9f}")
         self._clock_high[id(rep)] = (rep, max(high, rep.clock))
+        self._scan_completions()
+        return out
+
+    def _around_step_group(self, inner, cohort, t_end):
+        before = [(rep, rep.clock) for rep in cohort]
+        out = inner(cohort, t_end)
+        for rep, b in before:
+            _, high = self._clock_high.get(id(rep), (rep, b))
+            high = max(high, b)
+            if rep.clock < high - 1e-12:
+                self._violate(
+                    "clock",
+                    f"replica rid={rep.rid} clock moved backwards in a "
+                    f"grouped step: {high:.9f} -> {rep.clock:.9f}")
+            self._clock_high[id(rep)] = (rep, max(high, rep.clock))
         self._scan_completions()
         return out
 

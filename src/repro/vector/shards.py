@@ -179,6 +179,12 @@ class ShardedIndex:
                 if sh is not None and sh.cache_size > 0]
 
     # ---------------------------------------------------- id translation
+    def global_map(self, s: int) -> np.ndarray:
+        """Read-only view of shard ``s``'s local-row → global-id map
+        (−1 = tombstoned/never-filled). The megabatched pool mirrors
+        these rows into its device translation table."""
+        return self._global_of[s]
+
     def to_global(self, s: int, local_ids: np.ndarray) -> np.ndarray:
         """Shard-local result rows → global ids (−1 stays −1; tombstoned
         slots map to −1 too — their gid died with the eviction)."""

@@ -131,7 +131,14 @@ def test_rescued_children_bit_identical_to_uninterrupted(setup):
 
     pool = ShardedVectorPool(_cfg(**kw), db, seed=0)
     _submit_burst(pool, queries, 24)
-    pool.run_until(8e-4)  # mid-burst: work is in flight
+    # advance to a mid-burst chunk boundary with work in flight (the probe
+    # time depends on per-chunk sim cost, which the dispatch-pipeline knobs
+    # change — find it instead of hard-coding it)
+    t_probe = 0.0
+    while not any(rep.in_flight for rep in pool.replicas):
+        t_probe += 2e-4
+        assert t_probe < t_last, "burst drained with no observable in-flight"
+        pool.run_until(t_probe)
     victim = max(range(len(pool.replicas)),
                  key=lambda i: len(pool.replicas[i].in_flight))
     assert pool.replicas[victim].in_flight

@@ -146,13 +146,27 @@ def test_checkpoints_survive_replica_reassignment(setup):
                                    queries[0] + np.float32(1e-3 * (i % 7)),
                                    0.0, 0.025))
     static.run_until(1.0)
-    pool.run_until(1e-4)  # some children are mid-flight now
-    busy = max((r for r in pool.replicas), key=lambda r: len(r.in_flight))
-    src = busy.shard
-    n_inflight = len(busy.in_flight)
-    assert n_inflight > 0
+
+    # advance to a chunk boundary where the would-be donor (the LEAST
+    # loaded replica of the busiest shard — what _move_replica picks) still
+    # has children mid-flight; the boundary time depends on per-chunk sim
+    # cost, which the dispatch-pipeline knobs change, so find it
+    def _donor_load():
+        per_shard = {}
+        for r in pool.replicas:
+            per_shard[r.shard] = min(per_shard.get(r.shard, 1 << 30),
+                                     len(r.in_flight))
+        return max(per_shard.items(), key=lambda kv: kv[1])
+
+    t_probe = 0.0
+    src, n_inflight = _donor_load()
+    while n_inflight == 0:
+        t_probe += 2e-5
+        assert t_probe < 0.025, "burst drained with no loaded donor"
+        pool.run_until(t_probe)
+        src, n_inflight = _donor_load()
     dst = (src + 1) % 4
-    pool._move_replica(src, dst, 1e-4, exclude=None)
+    pool._move_replica(src, dst, t_probe, exclude=None)
     assert pool.metrics.rebalances == 1
     # checkpoint-intact: the requeued children carry their checkpoints
     resumed = [r for r in pool.schedulers[src].q_edf

@@ -82,6 +82,18 @@ def _kinds(pool):
     return {v.kind for v in pool.sanitizer.violations}
 
 
+def _run_to_inflight(pool, t_hi=2.4e-3, step=2e-4):
+    """Advance to a mid-burst chunk boundary with work in flight — the
+    boundary times depend on per-chunk sim cost, which the
+    dispatch-pipeline knobs change, so find one instead of hard-coding."""
+    t = 0.0
+    while not any(rep.in_flight for rep in pool.replicas):
+        t += step
+        assert t < t_hi, "burst drained with no observable in-flight"
+        pool.run_until(t)
+    return t
+
+
 def test_clock_rollback_trips(setup):
     db, queries = setup
     pool = ShardedVectorPool(_cfg(), db, seed=0)
@@ -129,7 +141,7 @@ def test_kill_dropping_in_flight_trips(setup):
     db, queries = setup
     pool = ShardedVectorPool(_cfg(rescue_enabled=False), db, seed=0)
     _burst(pool, queries, 24)
-    pool.run_until(8e-4)  # mid-burst: work is in flight
+    _run_to_inflight(pool)  # mid-burst: work is in flight
     victim = max(range(len(pool.replicas)),
                  key=lambda i: len(pool.replicas[i].in_flight))
     assert pool.replicas[victim].in_flight
@@ -147,7 +159,7 @@ def test_rescue_without_checkpoint_trips(setup):
     db, queries = setup
     pool = ShardedVectorPool(_cfg(rescue_enabled=True), db, seed=0)
     _burst(pool, queries, 24)
-    pool.run_until(8e-4)
+    _run_to_inflight(pool)
     victim = max(range(len(pool.replicas)),
                  key=lambda i: len(pool.replicas[i].in_flight))
     rep = pool.replicas[victim]
@@ -167,7 +179,7 @@ def test_move_dropping_in_flight_trips(setup):
     db, queries = setup
     pool = ShardedVectorPool(_cfg(), db, seed=0)
     _burst(pool, queries, 24)
-    pool.run_until(8e-4)
+    _run_to_inflight(pool)
     victim = max(range(len(pool.replicas)),
                  key=lambda i: len(pool.replicas[i].in_flight))
     src = pool.replicas[victim].shard

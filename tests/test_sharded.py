@@ -240,8 +240,13 @@ def test_kill_replica_reassigns_orphaned_shard(setup):
         pool.submit(VectorRequest(i, "prefill", queries[i], t, t + 0.025))
         t += 1e-4
     # step a little so work is in flight, then fail-stop one replica
-    pool.run_until(8e-4)
-    assert any(r.in_flight for r in pool.replicas)
+    # (the boundary time depends on per-chunk sim cost, which the
+    # dispatch-pipeline knobs change — find one instead of hard-coding)
+    t_probe = 0.0
+    while not any(r.in_flight for r in pool.replicas):
+        t_probe += 2e-4
+        assert t_probe < t, "burst drained with no observable in-flight"
+        pool.run_until(t_probe)
     victim = max(range(len(pool.replicas)),
                  key=lambda i: len(pool.replicas[i].in_flight))
     s = pool.replicas[victim].shard

@@ -1,0 +1,80 @@
+"""Aggregate every ``benchmarks/BENCH_*.json`` headline metric into
+``benchmarks/BENCH_summary.json`` so the perf trajectory is tracked
+across PRs in one file.
+
+Headlines are the numeric scalars at depth ≤ 2 of each report (top-level
+numbers plus ``section.metric`` children), which is where every bench
+writes its acceptance-facing numbers — per-arm rows and raw sweeps stay
+in the per-bench reports. Each entry also records the source file so a
+regression can be traced back.
+
+``PYTHONPATH=src python tools/bench_summary.py [--check]``
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+OUT_NAME = "BENCH_summary.json"
+
+
+def _headlines(report: dict) -> dict:
+    """Numeric scalars at depth ≤ 2, keyed ``name`` or ``section.name``.
+    Booleans are kept (acceptance flags); strings and arrays are not."""
+    out = {}
+    for key, val in sorted(report.items()):
+        if isinstance(val, bool) or isinstance(val, (int, float)):
+            out[key] = val
+        elif isinstance(val, dict):
+            for sub, sval in sorted(val.items()):
+                if isinstance(sval, bool) or isinstance(sval, (int, float)):
+                    out[f"{key}.{sub}"] = sval
+    return out
+
+
+def build(bench_dir: str = BENCH_DIR) -> dict:
+    summary = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name == OUT_NAME:
+            continue
+        with open(path) as f:
+            report = json.load(f)
+        summary[name] = _headlines(report)
+    return summary
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(BENCH_DIR, OUT_NAME))
+    ap.add_argument("--check", action="store_true",
+                    help="fail when the committed summary is stale")
+    args = ap.parse_args()
+    summary = build()
+    text = json.dumps(summary, indent=2, sort_keys=True) + "\n"
+    if args.check:
+        try:
+            with open(args.out) as f:
+                current = f.read()
+        except FileNotFoundError:
+            current = ""
+        if current != text:
+            print(f"{args.out} is stale — run `make bench-summary`",
+                  file=sys.stderr)
+            return 1
+        print(f"{args.out} is up to date "
+              f"({sum(len(v) for v in summary.values())} metrics)")
+        return 0
+    with open(args.out, "w") as f:
+        f.write(text)
+    n = sum(len(v) for v in summary.values())
+    print(f"wrote {args.out}: {len(summary)} reports, {n} metrics")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
