@@ -7,7 +7,8 @@ PYTEST := PYTHONPATH=src python -m pytest
 
 .PHONY: verify verify-fast verify-full bench bench-engine bench-preemption \
 	bench-cache bench-sharded bench-rebalance bench-chaos bench-chaos-smoke \
-	bench-dispatch bench-dispatch-smoke bench-summary trace-check docs \
+	bench-dispatch bench-dispatch-smoke bench-autoscale \
+	bench-autoscale-smoke bench-summary trace-check docs \
 	docs-check linkcheck analyze analyze-baseline verify-sanitized
 
 verify:
@@ -55,6 +56,16 @@ bench-dispatch:
 bench-dispatch-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_dispatch_pipeline --smoke \
 		--out /tmp/BENCH_dispatch_smoke.json
+
+# closed-loop autoscaler vs every static GPU split at equal budget;
+# asserts the controller dominates the best static arm on goodput
+bench-autoscale:
+	PYTHONPATH=src python -m benchmarks.bench_autoscale
+
+# shrunk autoscale run for CI: smaller budget/trace, same dominance
+# assert, report written to a temp file
+bench-autoscale-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_autoscale --smoke
 
 # aggregate every benchmarks/BENCH_*.json headline metric into
 # benchmarks/BENCH_summary.json (the cross-PR perf trajectory)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_architectures, bench_chaos,
+from benchmarks import (bench_architectures, bench_autoscale, bench_chaos,
                         bench_continuous_batching, bench_dispatch_pipeline,
                         bench_engine_dispatch, bench_preemption,
                         bench_rebalance, bench_recall_latency,
@@ -30,6 +30,7 @@ BENCHES = {
     "supp_rebalance": bench_rebalance.run,
     "supp_chaos": bench_chaos.run,
     "supp_dispatch": bench_dispatch_pipeline.run,
+    "supp_autoscale": bench_autoscale.run,
 }
 
 

@@ -316,6 +316,64 @@ class VectorPoolConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutoscalerConfig:
+    """Closed-loop SLO autoscaler for the cluster sim (goodput control
+    plane). OFF by default: a :class:`~repro.serving.cluster.ClusterSim`
+    only runs the controller when constructed with
+    ``autoscaler=AutoscalerConfig(...)`` — with the default (``None``)
+    nothing is scheduled, no seam changes behavior, and cluster runs are
+    bit-identical to a build without the subsystem. The controller is a
+    KEDA-style target tracker: each epoch it publishes a
+    ``ControlSignals`` snapshot from the rolling windows and applies at
+    most one scale action per pool under a fixed total-GPU budget, with
+    two-sided hysteresis + cooldown (the rebalancer's anti-thrash idiom)
+    and scale-down via safe drain (checkpoint-intact for vector
+    replicas, stop-admissions graceful drain for LLM instances)."""
+
+    # control epoch: one signals snapshot + at most one scale action per
+    # pool each epoch (simulated seconds)
+    epoch_s: float = 0.02
+    # rolling signal window for the windowed TTFT/ITL percentiles, probe
+    # deadline-miss rate and goodput rate (simulated seconds)
+    window_s: float = 0.25
+    # SLO targets defining goodput: a finished request is "good" when
+    # TTFT <= ttft_slo_s and (when it decoded) TPOT <= tpot_slo_s
+    ttft_slo_s: float = 0.4
+    tpot_slo_s: float = 0.05
+    # tolerated windowed probe deadline-miss rate before the vector pool
+    # reads as under-provisioned
+    probe_miss_budget: float = 0.1
+    # fixed total GPU budget in instance units (1 unit = one prefill or
+    # decode instance or one vector replica); 0 = freeze the allocation
+    # present when the controller attaches
+    gpu_budget: int = 0
+    # serving minimums — drains never take a pool below these (the
+    # vector floor is per shard, and cache-holding shards additionally
+    # keep cfg.cache_replication replicas)
+    min_prefill: int = 1
+    min_decode: int = 1
+    min_vector: int = 1
+    # target-tracking setpoints: queued work per active instance the
+    # controller tries to hold each pool at (vector replicas batch many
+    # probes per engine, so they carry a deeper target)
+    queue_target: float = 2.0
+    queue_target_vector: float = 4.0
+    # two-sided hysteresis band on normalized pool pressure
+    # (metric / target): above hot_factor => scale up; a donor must sit
+    # below cold_factor — both must hold, so oscillating load cannot
+    # thrash (the rebalancer's hot/cold idiom)
+    hot_factor: float = 1.0
+    cold_factor: float = 0.35
+    # minimum time between scale-ups / scale-downs of the same pool
+    cooldown_up_s: float = 0.05
+    cooldown_down_s: float = 0.1
+    # stage-aware priority guard: a vector-pool deficit may only take a
+    # decode unit while the windowed ITL p95 is within this factor of
+    # tpot_slo_s — a starved vector pool cannot push decode out of SLO
+    itl_protect_factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshConfig:
     shape: Tuple[int, ...]
     axes: Tuple[str, ...]

@@ -109,6 +109,7 @@ class PoolMetrics:
     # workload-adaptive rebalancing
     rebalances: int = 0  # replicas moved cold shard → hot shard
     migrated_entries: int = 0  # cache entries re-homed between shards
+    drains: int = 0  # replicas retired by a planned scale-down
     # failure handling (chaos / high-availability serving)
     replica_deaths: int = 0  # kill_replica fail-stops
     shard_losses: int = 0  # whole-shard (replicas + cache segment) losses
@@ -532,6 +533,41 @@ class VectorPool:
         """Model straggling hardware: replica ``idx``'s extends take
         ``factor``× the roofline time from now on."""
         self.replicas[idx].slowdown = factor
+
+    def drain_floor(self) -> int:
+        """Minimum replica count a planned drain must leave serving."""
+        return max(1, self.min_replicas)
+
+    def drain_replica(self, shard: Optional[int] = None) -> bool:
+        """Planned scale-down (autoscaler actuator): checkpoint the
+        least-loaded replica's in-flight work through ONE ``preempt``
+        dispatch, re-queue it CHECKPOINT-INTACT (the rebalancer's
+        ``_move_replica`` idiom — this is load shedding, not a failure,
+        so nothing restarts from scratch and the starvation cap is not
+        burned) and retire the replica. Refuses (returns False) rather
+        than drain below :meth:`drain_floor` — the pool always keeps a
+        serving path. ``shard`` is ignored for monolithic pools."""
+        if len(self.replicas) <= self.drain_floor():
+            return False
+        donor = min(self.replicas, key=lambda r: (len(r.in_flight), r.rid))
+        t = min(r.clock for r in self.replicas)
+        self._drain_one(donor, t)
+        return True
+
+    def _drain_one(self, donor: "_Replica", t: float):
+        """Retire ``donor``: preempt + checkpoint-intact re-queue of its
+        in-flight work on its scheduler, then remove it from the pool."""
+        sched = self._sched_for(donor)
+        if donor.in_flight:
+            pairs = donor.engine.preempt(list(donor.in_flight.keys()))
+            for rid, ckpt in pairs:
+                req = donor.in_flight.pop(rid)
+                sched.requeue_preempted(req, ckpt, t)
+                # planned drain, not a deadline rescue: keep the request
+                # evictable for truly urgent work (see _move_replica)
+                req.preemptions -= 1
+        self.replicas.remove(donor)
+        self.metrics.drains += 1
 
     # -------------------------------------------------------------- internals
     def _healthy(self, rep: _Replica) -> bool:
@@ -1534,6 +1570,37 @@ class ShardedVectorPool(VectorPool):
     def spawn_replica(self, shard: Optional[int] = None):
         assert shard is not None, "sharded pools spawn replicas per shard"
         self._add_shard_replica(shard)
+
+    def shard_floor(self, s: int) -> int:
+        """Serving minimum for shard ``s``: ≥ 1 replica always, and
+        ≥ ``cfg.cache_replication`` while the shard holds cache rows
+        (one drain must never leave the answer cache unservable)."""
+        if self.shards.shards[s].cache_size > 0:
+            return max(1, self.cfg.cache_replication)
+        return 1
+
+    def drain_replica(self, shard: Optional[int] = None) -> bool:
+        """Planned per-shard scale-down: pick the coldest shard with
+        replicas above its :meth:`shard_floor` (or the given ``shard``),
+        checkpoint the least-loaded replica's in-flight children through
+        one ``preempt`` dispatch, re-queue them CHECKPOINT-INTACT on the
+        shard's scheduler, free the megabatch lane and retire the
+        replica. Refuses (returns False) when no shard can shrink."""
+        t = min((r.clock for r in self.replicas), default=0.0)
+        if shard is None:
+            cands = [s for s in range(self.shards.num_shards)
+                     if len(self.shard_replicas(s)) > self.shard_floor(s)]
+            if not cands:
+                return False
+            shard = min(cands, key=lambda s: (self.shard_load_score(s, t), s))
+        elif len(self.shard_replicas(shard)) <= self.shard_floor(shard):
+            return False
+        donor = min(self.shard_replicas(shard),
+                    key=lambda r: (len(r.in_flight), r.rid))
+        self._drain_one(donor, t)
+        if self._mega:
+            self._group.free_lane(donor.engine.lane)
+        return True
 
     def cancel(self, rid: int) -> bool:
         """Cancel a logical request: tear down its whole fan-out — every

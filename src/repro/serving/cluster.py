@@ -34,14 +34,17 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.configs.base import AutoscalerConfig
 from repro.core.architectures import make_placements
 from repro.core.roofline_model import V5E, Hardware
 from repro.core.scheduler import VectorRequest
 from repro.core.trinity_pool import ShardedVectorPool, VectorPool
+from repro.serving.autoscaler import Autoscaler
 from repro.serving.engine import DecodeInstance, PrefillInstance
 from repro.serving.kv_cache import kv_bytes_per_token
 from repro.serving.kv_link import KVLink
-from repro.serving.request import ClusterMetrics, GenRequest, percentile
+from repro.serving.request import (ClusterMetrics, GenRequest, ScaleEvent,
+                                   percentile)
 
 
 class ClusterSim:
@@ -52,6 +55,7 @@ class ClusterSim:
                  decode_batch: int = 32, kv_link_bw: float = 40e9,
                  hw: Hardware = V5E, poll_dt: float = 2e-4,
                  straggler_factor: float = 2.5, elastic_decode: bool = False,
+                 autoscaler: Optional[AutoscalerConfig] = None,
                  use_pallas: Optional[bool] = False, seed: int = 0):
         self.cfg = model_cfg
         self.pool_cfg = pool_cfg
@@ -105,6 +109,14 @@ class ClusterSim:
         self._recent_stalls: deque = deque(maxlen=256)
         self.t_now = 0.0
         self._chips = chips_per_instance
+        # closed-loop SLO autoscaler (goodput control plane). None (the
+        # default) schedules nothing and changes no seam — bit-identical
+        # to a build without the subsystem
+        self.autoscaler: Optional[Autoscaler] = None
+        self._autoscale_scheduled = False
+        if autoscaler is not None:
+            self.metrics.set_window(autoscaler.window_s)
+            self.autoscaler = Autoscaler(self, autoscaler)
         if self.vector_pool.sanitizer is not None:
             # extend the pool's invariant layer with the cluster-level
             # orphaned-probe check (no-op when sanitizer_enabled is off)
@@ -116,6 +128,10 @@ class ClusterSim:
 
     def run(self, until: float):
         self.schedule(self.t_now, self._poll_pool)
+        if self.autoscaler is not None and not self._autoscale_scheduled:
+            self._autoscale_scheduled = True
+            self.schedule(self.t_now + self.autoscaler.cfg.epoch_s,
+                          self._autoscale_epoch)
         while self._events and self._events[0][0] <= until:
             t, _, fn = heapq.heappop(self._events)
             self.t_now = t
@@ -189,7 +205,7 @@ class ClusterSim:
         def _serve(r=req):
             r.t_first_token = self.t_now
             r.t_done = self.t_now
-            self.metrics.finished.append(r)
+            self.metrics.record_finish(r)
 
         self.schedule(t_ready, _serve)
 
@@ -197,7 +213,7 @@ class ClusterSim:
         """Completion hook: async-insert the (prompt embedding → answer)
         pair as a background-class request (cache misses only)."""
         req.t_done = self.t_now
-        self.metrics.finished.append(req)
+        self.metrics.record_finish(req)
         if self._cache_enabled:
             self.vector_pool.submit_insert(
                 self._prompt_embedding(req),
@@ -212,16 +228,19 @@ class ClusterSim:
         self._try_start_prefill()
 
     def _healthy(self, pool):
-        ew = [i.health.step_ewma for i in pool if i.health.alive]
+        # "serving" = alive and not draining/retired: a draining instance
+        # finishes its in-flight work but takes no NEW admissions (both
+        # flags are always False outside an autoscaler drain)
+        ew = [i.health.step_ewma for i in pool if i.health.serving]
         med = np.median([e for e in ew if e > 0]) if any(e > 0 for e in ew) else 0
         out = []
         for inst in pool:
-            if not inst.health.alive:
+            if not inst.health.serving:
                 continue
             if med and inst.health.step_ewma > self.straggler_factor * med:
                 continue  # straggler: route around it
             out.append(inst)
-        return out or [i for i in pool if i.health.alive]
+        return out or [i for i in pool if i.health.serving]
 
     def _try_start_prefill(self):
         for inst in self._healthy(self.prefill_pool):
@@ -241,6 +260,8 @@ class ClusterSim:
 
     def _finish_prefill(self, inst: PrefillInstance, batch: List[GenRequest]):
         inst.current = []
+        if inst.health.draining:
+            self._retire_instance("prefill", inst)
         for req in batch:
             req.t_prefill_done = self.t_now
             nbytes = req.prompt_len * kv_bytes_per_token(self.cfg)
@@ -266,17 +287,10 @@ class ClusterSim:
         if self.elastic_decode and len(self.decode_queue) > 4 * max(
                 1, len(self.decode_pool)) and \
                 len(self.decode_pool) < self.max_decode_instances:
-            # scaled-up instances get the SAME placement-derived capacity
-            # loss / HBM contention / EP penalty as the initial pool —
-            # colocated placements must not gain anomalously fast replicas
-            pl = self.placement
-            self.decode_pool.append(DecodeInstance(
-                len(self.decode_pool), self.cfg, self._chips,
-                max_batch=self.decode_pool[0].max_batch, hw=self.hw,
-                capacity_factor=pl.llm_capacity_factor_decode,
-                contention=(pl.hbm_contention_factor
-                            if pl.llm_capacity_factor_decode < 1 else 1.0),
-                ep_penalty=pl.ep_dispatch_penalty))
+            # audited (no fire-and-forget scaling): the ScaleEvent records
+            # the queue depth that triggered this add
+            self.add_decode_instance(reason="elastic_decode_queue",
+                                     signal=float(len(self.decode_queue)))
 
     def _decode_step(self, inst: DecodeInstance):
         if not inst.health.alive:
@@ -304,6 +318,8 @@ class ClusterSim:
                           lambda: self._decode_step(inst))
         else:
             inst.stepping = False
+            if inst.health.draining:
+                self._retire_instance("decode", inst)
         self._try_admit_decode()
 
     def _after_decode_rag(self, req: GenRequest, vreq: VectorRequest):
@@ -392,7 +408,8 @@ class ClusterSim:
             # would skew the stall fraction for the whole control loop.
             avg_stall = float(np.mean(self._recent_stalls))
             ew = [i.health.step_ewma for i in self.decode_pool
-                  if i.health.alive and i.health.step_ewma > 0]
+                  if i.health.alive and not i.health.retired
+                  and i.health.step_ewma > 0]
             step = float(np.median(ew)) if ew else 1e-3
             delta = max(1, next((r.rag_interval for i in self.decode_pool
                                  for r in i.active.values()), 64))
@@ -423,6 +440,135 @@ class ClusterSim:
         self.metrics.cache_entries_recovered = pm.cache_recovered
         self.metrics.cache_entries_lost = pm.cache_lost
 
+    # ------------------------------------------- autoscaler control plane
+    def _autoscale_epoch(self):
+        self.autoscaler.epoch()
+        self.schedule(self.t_now + self.autoscaler.cfg.epoch_s,
+                      self._autoscale_epoch)
+
+    def gpu_units(self) -> int:
+        """Instance-unit GPU accounting for the fixed autoscaler budget
+        (1 unit = one prefill/decode instance or one vector replica).
+        Draining instances still hold their unit until retired; dead and
+        retired instances hold nothing."""
+        llm = sum(1 for i in self.prefill_pool + self.decode_pool
+                  if i.health.alive and not i.health.retired)
+        return llm + len(self.vector_pool.replicas)
+
+    def _scale_event(self, pool: str, delta: int, reason: str,
+                     signal: float):
+        self.metrics.scale_events.append(
+            ScaleEvent(self.t_now, pool, delta, reason, float(signal)))
+
+    def _retire_instance(self, pool_name: str, inst):
+        """A drained instance emptied: it stops counting against the GPU
+        budget (it stays in the pool list so chaos closures keep stable
+        indices) and the autoscaler may re-grant the freed unit."""
+        inst.health.draining = False
+        inst.health.retired = True
+        if self.autoscaler is not None:
+            self.autoscaler.on_drain_complete(pool_name, self.t_now)
+
+    def add_prefill_instance(self, *, reason: str = "manual",
+                             signal: float = 0.0,
+                             kick: bool = False) -> PrefillInstance:
+        """Scale-up actuator: a fresh prefill instance with the SAME
+        placement-derived capacity/contention as the initial pool."""
+        pl = self.placement
+        inst = PrefillInstance(
+            len(self.prefill_pool), self.cfg, self._chips, hw=self.hw,
+            capacity_factor=pl.llm_capacity_factor_prefill,
+            contention=(pl.hbm_contention_factor
+                        if pl.llm_capacity_factor_prefill < 1 else 1.0))
+        self.prefill_pool.append(inst)
+        self._scale_event("prefill", +1, reason, signal)
+        if kick:
+            self._try_start_prefill()
+        return inst
+
+    def add_decode_instance(self, *, reason: str = "manual",
+                            signal: float = 0.0,
+                            kick: bool = False) -> DecodeInstance:
+        """Scale-up actuator (also the elastic-decode path): scaled-up
+        instances get the SAME placement-derived capacity loss / HBM
+        contention / EP penalty as the initial pool — colocated
+        placements must not gain anomalously fast replicas."""
+        pl = self.placement
+        inst = DecodeInstance(
+            len(self.decode_pool), self.cfg, self._chips,
+            max_batch=self.decode_pool[0].max_batch, hw=self.hw,
+            capacity_factor=pl.llm_capacity_factor_decode,
+            contention=(pl.hbm_contention_factor
+                        if pl.llm_capacity_factor_decode < 1 else 1.0),
+            ep_penalty=pl.ep_dispatch_penalty)
+        self.decode_pool.append(inst)
+        self._scale_event("decode", +1, reason, signal)
+        if kick:
+            self._try_admit_decode()
+        return inst
+
+    def drain_prefill_instance(self, *, reason: str = "manual",
+                               signal: float = 0.0
+                               ) -> Optional[PrefillInstance]:
+        """Graceful scale-down: the least-loaded serving prefill instance
+        stops taking admissions, finishes its running batch, then
+        retires. Refuses (None) rather than drain the last one."""
+        cands = [i for i in self.prefill_pool if i.health.serving]
+        if len(cands) <= 1:
+            return None
+        inst = min(cands, key=lambda i: (len(i.current), i.iid))
+        inst.health.draining = True
+        self._scale_event("prefill", -1, reason, signal)
+        if not inst.current and inst.busy_until <= self.t_now:
+            self._retire_instance("prefill", inst)
+        return inst
+
+    def drain_decode_instance(self, *, reason: str = "manual",
+                              signal: float = 0.0
+                              ) -> Optional[DecodeInstance]:
+        """Graceful scale-down: the least-loaded serving decode instance
+        stops admitting but keeps stepping its active requests to
+        completion — device KV is per-instance, so a drain (unlike a
+        kill) forces zero re-prefills and loses nothing. Refuses (None)
+        rather than drain the last serving instance."""
+        cands = [i for i in self.decode_pool if i.health.serving]
+        if len(cands) <= 1:
+            return None
+        inst = min(cands, key=lambda i: (len(i.active), i.iid))
+        inst.health.draining = True
+        self._scale_event("decode", -1, reason, signal)
+        if not inst.active:
+            self._retire_instance("decode", inst)
+        return inst
+
+    def add_vector_replica(self, *, reason: str = "manual",
+                           signal: float = 0.0):
+        """Scale-up actuator: sharded pools spawn on the hottest shard
+        (max load score — where the deficit is), monolithic pools join
+        the shared index at the clock frontier."""
+        pool = self.vector_pool
+        if hasattr(pool, "shards"):
+            t = self.t_now
+            s = max(range(pool.shards.num_shards),
+                    key=lambda i: (pool.shard_load_score(i, t), -i))
+            pool.spawn_replica(s)
+        else:
+            pool.add_replica()
+        self._scale_event("vector", +1, reason, signal)
+
+    def drain_vector_replica(self, *, shard: Optional[int] = None,
+                             reason: str = "manual",
+                             signal: float = 0.0) -> bool:
+        """Safe scale-down through the pool's checkpoint-intact drain
+        (``drain_replica``): in-flight work re-queues with its progress,
+        serving minimums hold. False when no replica can be drained.
+        ``shard`` pins the donor shard (sharded pools; monolithic pools
+        ignore it)."""
+        ok = self.vector_pool.drain_replica(shard)
+        if ok:
+            self._scale_event("vector", -1, reason, signal)
+        return ok
+
     # ----------------------------------------------------------- failures
     def _cancel_probes(self, req: GenRequest):
         """Tear down every in-flight vector-pool probe issued for ``req``:
@@ -442,6 +588,10 @@ class ClusterSim:
                 self._cancel_probes(req)
                 self.prefill_queue.appendleft(req)
             inst.current = []
+            if inst.health.draining:
+                # a killed draining instance can never empty gracefully —
+                # complete the drain now so a pending grant isn't stranded
+                self._retire_instance("prefill", inst)
             self._try_start_prefill()
         return _kill
 
@@ -455,6 +605,8 @@ class ClusterSim:
                 req.stalled_until = 0.0
                 self._cancel_probes(req)
                 self.prefill_queue.append(req)  # device KV lost: re-prefill
+            if inst.health.draining:
+                self._retire_instance("decode", inst)
             self._try_start_prefill()
         return _kill
 

@@ -21,6 +21,18 @@ class InstanceHealth:
     slowdown: float = 1.0
     step_ewma: float = 0.0
     alive: bool = True
+    # graceful scale-down (autoscaler): a draining instance stops taking
+    # new admissions but finishes its in-flight work (device KV is
+    # per-instance — a kill would force re-prefills, a drain loses
+    # nothing); once empty it is retired and stops counting against the
+    # GPU budget. Both always False outside an autoscaler drain.
+    draining: bool = False
+    retired: bool = False
+
+    @property
+    def serving(self) -> bool:
+        """Eligible for NEW admissions (alive, not draining/retired)."""
+        return self.alive and not self.draining and not self.retired
 
 
 class PrefillInstance:

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -52,9 +53,89 @@ def percentile(xs, q):
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
+def slo_good(req: GenRequest, ttft_slo_s: float, tpot_slo_s: float) -> bool:
+    """Did this finished request land inside the SLO? Goodput counts only
+    these (DistServe framing): TTFT within budget AND — when the request
+    actually decoded — TPOT within budget. Cache hits carry no TPOT and
+    are judged on TTFT alone."""
+    if req.ttft is None or req.ttft > ttft_slo_s:
+        return False
+    tpot = req.tpot
+    return tpot is None or tpot <= tpot_slo_s
+
+
+class RollingWindow:
+    """Incremental time-ordered sample window.
+
+    Samples arrive in nondecreasing sim time via :meth:`add`; accessors
+    prune anything older than ``window_s`` behind ``t_now`` and answer
+    percentiles/rates over what remains — O(1) amortized per sample, so
+    a controller can read it every epoch instead of re-scanning the full
+    run. ``window_s <= 0`` keeps every sample (full-run mode), which is
+    how the end-of-run ``summary()`` and the windowed accessors share
+    one code path (and one ``percentile`` definition)."""
+
+    def __init__(self, window_s: float = 0.0):
+        self.window_s = window_s
+        self._samples: deque = deque()  # (t, value), t nondecreasing
+
+    def add(self, t: float, value):
+        self._samples.append((t, value))
+
+    def _prune(self, t_now: float):
+        if self.window_s <= 0:
+            return
+        lo = t_now - self.window_s
+        while self._samples and self._samples[0][0] < lo:
+            self._samples.popleft()
+
+    def values(self, t_now: float) -> list:
+        self._prune(t_now)
+        return [v for _, v in self._samples]
+
+    def count(self, t_now: float) -> int:
+        self._prune(t_now)
+        return len(self._samples)
+
+    def rate(self, t_now: float) -> float:
+        """Samples per second over the window (full-run mode: over the
+        span from the first sample to ``t_now``)."""
+        n = self.count(t_now)
+        if self.window_s > 0:
+            return n / self.window_s
+        if not self._samples:
+            return 0.0
+        return n / max(t_now - self._samples[0][0], 1e-9)
+
+    def percentile(self, q: float, t_now: float) -> float:
+        return percentile(self.values(t_now), q)
+
+    def mean(self, t_now: float) -> float:
+        xs = [v for v in self.values(t_now) if v is not None]
+        return float(np.mean(xs)) if xs else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """One audited scaling decision: every replica/instance the cluster
+    adds or drains records when, which pool, which direction and the
+    signal that triggered it — fire-and-forget scale-ups are banned."""
+
+    t: float
+    pool: str  # "prefill" | "decode" | "vector"
+    delta: int  # +1 (add) | -1 (drain initiated)
+    reason: str  # triggering signal name, e.g. "decode_queue_depth"
+    signal: float = 0.0  # the signal's value at decision time
+
+
 @dataclasses.dataclass
 class ClusterMetrics:
     finished: List[GenRequest] = dataclasses.field(default_factory=list)
+    # rolling-window horizon for the incremental accessors below (sim
+    # seconds); reconfigure via set_window() BEFORE the run starts
+    window_s: float = 0.25
+    # audited scaling decisions (elastic decode + autoscaler actuators)
+    scale_events: List[ScaleEvent] = dataclasses.field(default_factory=list)
     # vector-pool stage-aware preemption (stamped by ClusterSim)
     pool_preemptions: int = 0
     pool_resumes: int = 0
@@ -83,6 +164,71 @@ class ClusterMetrics:
     cache_entries_recovered: int = 0  # re-homed from backup on shard loss
     cache_entries_lost: int = 0  # unrecoverable (no backup copy)
 
+    def __post_init__(self):
+        self._make_windows()
+
+    def _make_windows(self):
+        self._w_ttft = RollingWindow(self.window_s)
+        self._w_tpot = RollingWindow(self.window_s)
+        self._w_done = RollingWindow(self.window_s)  # holds GenRequest refs
+
+    def set_window(self, window_s: float):
+        """Reconfigure the rolling horizon (drops buffered samples —
+        call before the run starts)."""
+        self.window_s = window_s
+        self._make_windows()
+
+    def record_finish(self, req: GenRequest):
+        """The single completion seam: appends to ``finished`` AND feeds
+        the incremental windows, so the controller's rolling view and
+        the end-of-run ``summary()`` see the same stream."""
+        self.finished.append(req)
+        t = req.t_done if req.t_done is not None else req.t_arrival
+        if req.ttft is not None:
+            self._w_ttft.add(t, req.ttft)
+        tpot = req.tpot
+        if tpot is not None:
+            self._w_tpot.add(t, tpot)
+        self._w_done.add(t, req)
+
+    # ---- incremental rolling-window accessors (controller-facing) ----
+    def window_ttft_p(self, q: float, t_now: float) -> float:
+        return self._w_ttft.percentile(q, t_now)
+
+    def window_tpot_p(self, q: float, t_now: float) -> float:
+        return self._w_tpot.percentile(q, t_now)
+
+    def window_finish_rate(self, t_now: float) -> float:
+        """Completions per second over the window."""
+        return self._w_done.rate(t_now)
+
+    def window_goodput(self, t_now: float, ttft_slo_s: float,
+                       tpot_slo_s: float) -> float:
+        """SLO-good completions per second over the window."""
+        reqs = self._w_done.values(t_now)
+        good = sum(1 for r in reqs if slo_good(r, ttft_slo_s, tpot_slo_s))
+        if self._w_done.window_s > 0:
+            return good / self._w_done.window_s
+        if not reqs:
+            return 0.0
+        return good / max(t_now - self._w_done._samples[0][0], 1e-9)
+
+    def goodput(self, t_elapsed: float, ttft_slo_s: float,
+                tpot_slo_s: float, gpu_units: int = 1) -> float:
+        """Full-run goodput per GPU-second: SLO-good completions /
+        (gpu_units × t_elapsed) — the bench's cross-arm objective."""
+        good = sum(1 for r in self.finished
+                   if slo_good(r, ttft_slo_s, tpot_slo_s))
+        return good / max(gpu_units * t_elapsed, 1e-9)
+
+    # full-run percentile accessors: same ``percentile`` primitive as the
+    # windowed path (window vs full-run agreement is tested)
+    def ttft_p(self, q: float) -> float:
+        return percentile([r.ttft for r in self.finished], q)
+
+    def tpot_p(self, q: float) -> float:
+        return percentile([r.tpot for r in self.finished], q)
+
     def summary(self, t_elapsed: float) -> dict:
         fin = self.finished
         toks = sum(r.tokens_out for r in fin)
@@ -97,10 +243,10 @@ class ClusterMetrics:
         return {
             "requests": len(fin),
             "throughput_tok_s": toks / max(t_elapsed, 1e-9),
-            "ttft_p50": percentile([r.ttft for r in fin], 50),
-            "ttft_p95": percentile([r.ttft for r in fin], 95),
-            "tpot_p50": percentile([r.tpot for r in fin], 50),
-            "tpot_p95": percentile([r.tpot for r in fin], 95),
+            "ttft_p50": self.ttft_p(50),
+            "ttft_p95": self.ttft_p(95),
+            "tpot_p50": self.tpot_p(50),
+            "tpot_p95": self.tpot_p(95),
             "decode_stall_frac": stall / max(decode_time, 1e-9),
             "re_prefills": sum(r.re_prefills for r in fin),
             "prefill_deaths": self.prefill_deaths,
@@ -125,4 +271,7 @@ class ClusterMetrics:
             "cache_hits": self.cache_hits,
             "cache_hit_rate": self.cache_hits / max(len(fin), 1),
             "saved_prefill_tokens": self.saved_prefill_tokens,
+            "scale_events": len(self.scale_events),
+            "scale_ups": sum(1 for e in self.scale_events if e.delta > 0),
+            "scale_downs": sum(1 for e in self.scale_events if e.delta < 0),
         }

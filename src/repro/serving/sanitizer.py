@@ -24,6 +24,13 @@ executing pool can witness. It wraps the seams of a live
 ``probe``       no orphaned probes after kills — every callback the
                 cluster still holds in ``_probe_cb`` references a
                 request that is still live inside the pool.
+``replica``     replica-count conservation across scaling actions — a
+                ``drain_replica`` changes the count by exactly −1 (or 0
+                when refused) and never lands any shard below its
+                serving floor; a spawn changes it by exactly +1; and a
+                drain re-queues every donor in-flight request
+                checkpoint-intact (the autoscaler's scale-down must be
+                invisible to request outcomes).
 
 Knobs-off-free: the sanitizer only exists when
 ``VectorPoolConfig.sanitizer_enabled`` is set. With the knob off
@@ -44,7 +51,7 @@ __all__ = ["Violation", "PoolSanitizer", "attach"]
 
 @dataclasses.dataclass(frozen=True)
 class Violation:
-    kind: str  # clock | completion | checkpoint | gid | probe
+    kind: str  # clock | completion | checkpoint | gid | probe | replica
     detail: str
 
     def __str__(self) -> str:
@@ -94,6 +101,11 @@ class PoolSanitizer:
             self._wrap(pool, "_step_group", self._around_step_group)
         self._wrap(pool, "kill_replica", self._around_kill)
         self._wrap(pool, "run_until", self._around_run_until)
+        if hasattr(pool, "drain_replica"):
+            self._wrap(pool, "drain_replica", self._around_drain)
+        for name in ("add_replica", "spawn_replica"):
+            if hasattr(pool, name):
+                self._wrap(pool, name, self._around_spawn)
         if hasattr(pool, "_move_replica"):
             self._wrap(pool, "_move_replica", self._around_move)
         if hasattr(pool, "shards"):
@@ -241,6 +253,82 @@ class PoolSanitizer:
                     "checkpoint — moves must preserve progress")
         self._check_gids()
         return out
+
+    # --- scaling actions: replica-count conservation --------------------
+    def _around_drain(self, inner, *args, **kwargs):
+        """A drain removes EXACTLY one replica (or none, when refused),
+        never breaches a serving floor, and every request that was in
+        flight on the donor is re-queued checkpoint-intact (or pending /
+        already completed) — an autoscaler scale-down must be invisible
+        to request outcomes."""
+        pool = self.pool
+        n_before = len(pool.replicas)
+        before_flight: Dict[int, object] = {}
+        for rep in pool.replicas:
+            before_flight.update(rep.in_flight)
+        before_queued = self._queued_rids()
+        out = inner(*args, **kwargs)
+        self._scan_completions()
+        n_after = len(pool.replicas)
+        delta = n_after - n_before
+        if delta != (-1 if out else 0):
+            self._violate(
+                "replica",
+                f"drain_replica returned {out!r} but replica count moved "
+                f"{n_before} -> {n_after}")
+        if out:
+            self._check_floors()
+            after_queued = self._queued_rids()
+            pending = {r.rid for _, _, r in pool._pending}
+            after_flight: Set[int] = set()
+            for rep in pool.replicas:
+                after_flight.update(rep.in_flight)
+            for rid, req in before_flight.items():
+                if rid in after_flight:
+                    continue  # survived on a non-donor replica
+                if rid not in after_queued and rid not in pending \
+                        and not self._resolved_elsewhere(req):
+                    self._violate(
+                        "replica",
+                        f"rid={rid} kind={req.kind} was in flight before "
+                        "a drain and is nowhere afterwards (not queued, "
+                        "not pending, not completed)")
+                elif rid in after_queued and rid not in before_queued \
+                        and req.checkpoint is None:
+                    self._violate(
+                        "replica",
+                        f"rid={rid} re-queued by a drain WITHOUT its "
+                        "checkpoint — drains must preserve progress")
+        self._check_gids()
+        return out
+
+    def _around_spawn(self, inner, *args, **kwargs):
+        pool = self.pool
+        n_before = len(pool.replicas)
+        out = inner(*args, **kwargs)
+        n_after = len(pool.replicas)
+        if n_after != n_before + 1:
+            self._violate(
+                "replica",
+                f"spawn moved replica count {n_before} -> {n_after} "
+                "(want exactly +1)")
+        return out
+
+    def _check_floors(self):
+        pool = self.pool
+        if hasattr(pool, "shards"):
+            for s in range(pool.shards.num_shards):
+                n = len(pool.shard_replicas(s))
+                if n < pool.shard_floor(s):
+                    self._violate(
+                        "replica",
+                        f"shard {s} at {n} replicas, below its serving "
+                        f"floor {pool.shard_floor(s)}")
+        elif len(pool.replicas) < pool.drain_floor():
+            self._violate(
+                "replica",
+                f"pool at {len(pool.replicas)} replicas, below its "
+                f"serving floor {pool.drain_floor()}")
 
     # --- cache gid uniqueness -------------------------------------------
     def _around_index_mutation(self, inner, *args, **kwargs):

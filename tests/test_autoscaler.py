@@ -1,0 +1,281 @@
+"""Autoscaler control plane: rolling-window metrics agreement, safe
+drains (zero lost / zero duplicated), replica-count conservation,
+audited scale events, closed-loop budget discipline, knobs-off."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import AutoscalerConfig, VectorPoolConfig
+from repro.core.scheduler import VectorRequest
+from repro.core.trinity_pool import VectorPool
+from repro.serving.cluster import ClusterSim
+from repro.serving.request import (ClusterMetrics, GenRequest,
+                                   RollingWindow, slo_good)
+from repro.serving.traffic import constant, TenantSpec, TrafficGenerator
+from repro.vector.dataset import make_dataset
+from repro.vector.graph import make_cagra_graph
+
+
+@pytest.fixture(scope="module")
+def pool_setup():
+    db, queries = make_dataset(2000, 64, num_clusters=16, num_queries=32,
+                               seed=7)
+    cfg = VectorPoolConfig(num_vectors=2000, dim=64, graph_degree=16,
+                           max_requests=16, top_m=16, parents_per_step=2,
+                           task_batch=512, visited_slots=256, top_k=5)
+    graph = make_cagra_graph(db, 16, seed=7)
+    return cfg, db, queries, graph
+
+
+def _mk_sim(pool_setup, **kw):
+    cfg, db, _, graph = pool_setup
+    model_cfg = get_smoke_config("phi3-medium-14b")
+    defaults = dict(placement="disaggregated", policy="trinity",
+                    n_prefill=2, n_decode=2, decode_batch=8)
+    defaults.update(kw)
+    return ClusterSim(model_cfg, cfg, db, graph, **defaults)
+
+
+def _burst(sim, n=24, seed=0, rag_interval=4, max_new=16, spacing=0.004):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(spacing))
+        sim.arrive(GenRequest(i, prompt_len=int(rng.integers(64, 512)),
+                              max_new_tokens=max_new, t_arrival=t,
+                              rag_interval=rag_interval))
+    return t
+
+
+def _finished_request(rid, t0, ttft, tpot, n_tok=4):
+    r = GenRequest(rid, prompt_len=64, max_new_tokens=n_tok, t_arrival=t0)
+    r.t_first_token = t0 + ttft
+    r.token_times = [r.t_first_token + i * tpot for i in range(n_tok)]
+    r.tokens_out = n_tok
+    r.t_done = r.token_times[-1]
+    return r
+
+
+# ------------------------------------------------------- rolling windows
+def test_window_agrees_with_full_run_on_stationary_trace():
+    """On a stationary trace, a window covering the whole run must agree
+    EXACTLY with the full-run accessors (shared percentile primitive)."""
+    m = ClusterMetrics()
+    m.set_window(1e9)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(200):
+        t += float(rng.exponential(0.01))
+        m.record_finish(_finished_request(
+            i, t, ttft=float(rng.uniform(0.01, 0.05)),
+            tpot=float(rng.uniform(0.001, 0.004))))
+    for q in (50, 90, 95, 99):
+        assert m.window_ttft_p(q, t) == m.ttft_p(q)
+        assert m.window_tpot_p(q, t) == m.tpot_p(q)
+    # goodput too: same SLO verdict per request on both paths
+    full = m.goodput(t, 0.03, 0.003, gpu_units=1) * t
+    windowed = m.window_goodput(t, 0.03, 0.003) * 1e9
+    assert windowed == pytest.approx(full)
+
+
+def test_window_forgets_old_samples():
+    m = ClusterMetrics()
+    m.set_window(1.0)
+    m.record_finish(_finished_request(0, 0.0, ttft=5.0, tpot=0.5))
+    m.record_finish(_finished_request(1, 10.0, ttft=0.01, tpot=0.001))
+    t_now = 10.0 + 0.01 + 3 * 0.001 + 0.5
+    # the t=~5 outlier fell out of the window; full-run still sees it
+    assert m.window_ttft_p(95, t_now) == pytest.approx(0.01)
+    assert m.ttft_p(95) > 1.0
+
+
+def test_rolling_window_rate_modes():
+    w = RollingWindow(2.0)
+    for i in range(10):
+        w.add(i * 0.1, i)
+    assert w.rate(1.0) == pytest.approx(10 / 2.0)
+    full = RollingWindow(0.0)
+    for i in range(10):
+        full.add(i * 0.1, i)
+    assert full.rate(0.9) == pytest.approx(10 / 0.9)
+    assert full.count(100.0) == 10  # full-run mode never prunes
+
+
+def test_slo_good_judges_both_axes():
+    ok = _finished_request(0, 0.0, ttft=0.01, tpot=0.001)
+    assert slo_good(ok, 0.02, 0.002)
+    assert not slo_good(ok, 0.005, 0.002)  # ttft breach
+    assert not slo_good(ok, 0.02, 0.0005)  # tpot breach
+    prefill_only = GenRequest(1, 64, 4, 0.0)
+    prefill_only.t_first_token = 0.01
+    prefill_only.t_done = 0.01
+    assert slo_good(prefill_only, 0.02, 0.0005)  # no tokens → TTFT only
+
+
+# ------------------------------------------------------------ safe drains
+@pytest.mark.slow
+def test_decode_drain_mid_burst_loses_nothing(pool_setup):
+    sim = _mk_sim(pool_setup, n_decode=3)
+    t_last = _burst(sim, n=24)
+    # drain one decode instance while the burst is in flight
+    sim.schedule(t_last * 0.4, lambda: sim.drain_decode_instance(
+        reason="test_drain", signal=1.0))
+    sim.run(t_last + 5.0)
+    rids = sorted(r.rid for r in sim.metrics.finished)
+    assert rids == list(range(24))  # zero lost, zero duplicated
+    # a drain (unlike a kill) never forces re-prefills
+    assert sum(r.re_prefills for r in sim.metrics.finished) == 0
+    retired = [i for i in sim.decode_pool if i.health.retired]
+    assert len(retired) == 1 and not retired[0].active
+    assert all(not i.health.draining for i in sim.decode_pool)
+    events = sim.metrics.scale_events
+    assert [(e.pool, e.delta, e.reason) for e in events] == \
+        [("decode", -1, "test_drain")]
+    assert sim.gpu_units() == 2 + 2 + 1  # prefill + serving decode + vec
+
+
+@pytest.mark.slow
+def test_prefill_drain_mid_burst_loses_nothing(pool_setup):
+    sim = _mk_sim(pool_setup, n_prefill=2)
+    t_last = _burst(sim, n=24)
+    sim.schedule(t_last * 0.3, lambda: sim.drain_prefill_instance(
+        reason="test_drain"))
+    sim.run(t_last + 5.0)
+    assert sorted(r.rid for r in sim.metrics.finished) == list(range(24))
+    assert sum(r.re_prefills for r in sim.metrics.finished) == 0
+    assert sum(1 for i in sim.prefill_pool if i.health.retired) == 1
+
+
+@pytest.mark.slow
+def test_vector_replica_drain_mid_burst_exactly_once(pool_setup):
+    cfg, db, queries, graph = pool_setup
+    cfg = VectorPoolConfig(**{**cfg.__dict__, "sanitizer_enabled": True})
+    pool = VectorPool(cfg, db, graph, replicas=3)
+    # slow replicas so the burst is genuinely in flight at drain time
+    for i in range(len(pool.replicas)):
+        pool.set_slowdown(i, 50.0)
+    for i in range(48):
+        pool.submit(VectorRequest(i, "decode", queries[i % len(queries)],
+                                  t_arrival=i * 1e-5, deadline=None))
+    pool.run_until(0.004)
+    assert any(rep.in_flight for rep in pool.replicas)
+    assert pool.drain_replica()
+    assert len(pool.replicas) == 2
+    assert pool.metrics.drains == 1
+    pool.run_until(30.0)
+    rids = sorted(r.rid for r in pool.metrics.completed)
+    assert rids == list(range(48))  # exactly once, nothing dropped
+    pool.sanitizer.assert_clean()
+
+
+def test_vector_drain_respects_floor(pool_setup):
+    cfg, db, _, graph = pool_setup
+    pool = VectorPool(cfg, db, graph, replicas=1)
+    assert not pool.drain_replica()  # refuses below the serving floor
+    assert len(pool.replicas) == 1
+    assert pool.metrics.drains == 0
+
+
+def test_sanitizer_catches_planted_drain_bug(pool_setup):
+    """A drain that drops its donor's in-flight work (planted by gutting
+    engine.preempt) must trip the replica-conservation invariant."""
+    cfg, db, queries, graph = pool_setup
+    cfg = VectorPoolConfig(**{**cfg.__dict__, "sanitizer_enabled": True})
+    pool = VectorPool(cfg, db, graph, replicas=2)
+    for i in range(len(pool.replicas)):
+        pool.set_slowdown(i, 50.0)
+    for i in range(24):
+        pool.submit(VectorRequest(i, "decode", queries[i % len(queries)],
+                                  t_arrival=i * 1e-5, deadline=None))
+    pool.run_until(0.004)
+    assert any(rep.in_flight for rep in pool.replicas)
+    for rep in pool.replicas:
+        rep.engine.preempt = lambda rids: []  # planted bug: drop work
+    assert pool.drain_replica()
+    assert any(v.kind == "replica" for v in pool.sanitizer.violations), \
+        [str(v) for v in pool.sanitizer.violations]
+
+
+# ----------------------------------------------------- audited scaling
+@pytest.mark.slow
+def test_elastic_decode_scale_up_is_audited(pool_setup):
+    sim = _mk_sim(pool_setup, n_decode=1, elastic_decode=True)
+    # near-simultaneous arrivals so the decode queue genuinely builds
+    _burst(sim, n=40, max_new=32, rag_interval=0, spacing=1e-5)
+    sim.run(6.0)
+    ups = [e for e in sim.metrics.scale_events if e.delta > 0]
+    assert ups, "elastic decode never fired — burst miscalibrated"
+    for e in ups:
+        assert e.pool == "decode"
+        assert e.reason == "elastic_decode_queue"
+        assert e.signal > 4  # the queue depth that tripped it
+        assert e.t > 0
+    s = sim.metrics.summary(6.0)
+    assert s["scale_ups"] == len(ups)
+    assert s["scale_downs"] == 0
+
+
+# ------------------------------------------------------ closed-loop sim
+@pytest.mark.slow
+def test_closed_loop_respects_budget_and_minimums(pool_setup):
+    _, db, _, graph = pool_setup
+    # deliberately choked vector pool: the RAG tenant below builds a
+    # real probe deficit the controller has free budget to fix
+    cfg = VectorPoolConfig(num_vectors=2000, dim=64, graph_degree=16,
+                           max_requests=1, top_m=64, parents_per_step=1,
+                           task_batch=32, visited_slots=256, top_k=5)
+    acfg = AutoscalerConfig(epoch_s=0.005, window_s=0.05,
+                            ttft_slo_s=0.01, tpot_slo_s=0.0005,
+                            gpu_budget=5, cooldown_up_s=0.01,
+                            cooldown_down_s=0.02)
+    model_cfg = get_smoke_config("phi3-medium-14b")
+    sim = ClusterSim(model_cfg, cfg, db, graph,
+                     placement="disaggregated", policy="trinity",
+                     n_prefill=1, n_decode=1, decode_batch=8,
+                     autoscaler=acfg)
+    assert sim.autoscaler.budget == 5  # explicit budget wins
+    gen = TrafficGenerator(
+        constant(1200.0),
+        [TenantSpec("hot", prompt_len=(256, 1024),
+                    max_new_tokens=(8, 32), rag_interval=1)], seed=1)
+    reqs = gen.generate(0.15)
+    for r in reqs:
+        sim.arrive(r)
+    units_seen = []
+    orig_epoch = sim.autoscaler.epoch
+
+    def spying_epoch():
+        orig_epoch()
+        units_seen.append(sim.gpu_units())
+
+    sim.autoscaler.epoch = spying_epoch
+    sim.run(4.0)
+    assert sorted(r.rid for r in sim.metrics.finished) == \
+        list(range(len(reqs)))
+    assert units_seen and max(units_seen) <= 5  # budget is a hard cap
+    assert sim.metrics.scale_events, "controller never acted"
+    # serving minimums always hold
+    assert sum(1 for i in sim.prefill_pool if i.health.serving) >= 1
+    assert sum(1 for i in sim.decode_pool if i.health.serving) >= 1
+    assert len(sim.vector_pool.replicas) >= 1
+    # signal plane published every epoch
+    log = sim.autoscaler.signals_log
+    assert len(log) > 10
+    assert all(s.gpu_units <= 5 for s in log)
+
+
+def test_budget_frozen_at_attach_when_zero(pool_setup):
+    acfg = AutoscalerConfig(gpu_budget=0)
+    sim = _mk_sim(pool_setup, n_prefill=2, n_decode=3, autoscaler=acfg)
+    assert sim.autoscaler.budget == 2 + 3 + 1
+
+
+def test_knobs_off_schedules_nothing(pool_setup):
+    sim = _mk_sim(pool_setup)
+    assert sim.autoscaler is None
+    _burst(sim, n=8)
+    sim.run(2.0)
+    assert sim.metrics.scale_events == []
+    for inst in sim.prefill_pool + sim.decode_pool:
+        assert not inst.health.draining and not inst.health.retired
+    assert len(sim.metrics.finished) == 8

@@ -1,0 +1,141 @@
+"""Traffic generators: determinism, rate shaping, tenant mixes, drift,
+rid discipline."""
+import numpy as np
+import pytest
+
+from repro.serving.traffic import (
+    BULK_PREFILL, RAG_DECODE, REPEAT_CHAT, RID_LIMIT, TenantSpec,
+    TrafficGenerator, compose, constant, diurnal, drifting_mix_trace,
+    drifting_mix_weights, flash_crowd, generate_timed)
+
+PLAIN = TenantSpec("plain", prompt_len=(64, 128), max_new_tokens=(4, 8))
+
+
+def test_trace_is_deterministic_in_seed():
+    gen = drifting_mix_trace(1.0, 200.0, seed=5)
+    a = gen.generate(1.0)
+    b = gen.generate(1.0)
+    assert len(a) == len(b) > 50
+    for ra, rb in zip(a, b):
+        assert (ra.rid, ra.t_arrival, ra.prompt_len, ra.max_new_tokens,
+                ra.rag_interval, ra.prompt_id) == \
+               (rb.rid, rb.t_arrival, rb.prompt_len, rb.max_new_tokens,
+                rb.rag_interval, rb.prompt_id)
+    c = drifting_mix_trace(1.0, 200.0, seed=6).generate(1.0)
+    assert [r.t_arrival for r in c] != [r.t_arrival for r in a]
+
+
+def test_constant_rate_hits_target_count():
+    gen = TrafficGenerator(constant(500.0), [PLAIN], seed=1)
+    reqs = gen.generate(4.0)
+    # Poisson(2000): 5 sigma ≈ 224
+    assert abs(len(reqs) - 2000) < 250
+    ts = [r.t_arrival for r in reqs]
+    assert ts == sorted(ts)
+    assert all(0 <= t < 4.0 for t in ts)
+
+
+def test_diurnal_cycle_shapes_arrivals():
+    # one full period: first half is the daytime bulge, second the dip
+    gen = TrafficGenerator(diurnal(400.0, amplitude=0.9, period_s=2.0),
+                           [PLAIN], seed=2)
+    reqs = gen.generate(2.0)
+    day = sum(1 for r in reqs if r.t_arrival < 1.0)
+    night = len(reqs) - day
+    assert day > 1.5 * night
+
+
+def test_flash_crowd_rides_on_baseline():
+    rate = compose(constant(100.0),
+                   flash_crowd(900.0, t_start=1.0, ramp_s=0.1,
+                               hold_s=0.3, decay_s=0.1))
+    gen = TrafficGenerator(rate, [PLAIN], seed=3)
+    reqs = gen.generate(2.0)
+    before = sum(1 for r in reqs if r.t_arrival < 1.0)
+    burst = sum(1 for r in reqs if 1.0 <= r.t_arrival < 1.5)
+    assert burst > 2.5 * before / 2  # burst window is half the length
+
+
+def test_static_tenant_mix_matches_weights():
+    a = TenantSpec("a", weight=3.0, prompt_len=(64, 65),
+                   max_new_tokens=(4, 5))
+    b = TenantSpec("b", weight=1.0, prompt_len=(1024, 1025),
+                   max_new_tokens=(4, 5))
+    reqs = TrafficGenerator(constant(800.0), [a, b],
+                            seed=4).generate(2.0)
+    share_a = sum(1 for r in reqs if r.prompt_len == 64) / len(reqs)
+    assert 0.68 < share_a < 0.82
+
+
+def test_drifting_mix_rotates_dominant_tenant():
+    t_end = 3.0
+    gen = drifting_mix_trace(t_end, 300.0, seed=7)
+    reqs = gen.generate(t_end)
+
+    def shares(lo, hi):
+        window = [r for r in reqs if lo <= r.t_arrival < hi]
+        bulk = sum(1 for r in window
+                   if r.prompt_len >= BULK_PREFILL.prompt_len[0])
+        rag = sum(1 for r in window if r.rag_interval == 1)
+        n = max(len(window), 1)
+        return bulk / n, rag / n
+
+    # anchors sit at t = 0, t_end/3, 2·t_end/3 (and hold): sample tight
+    # windows around the first two
+    bulk_early, rag_early = shares(0.0, 0.4)
+    bulk_mid, rag_mid = shares(0.8, 1.2)
+    assert bulk_early > 0.4 > bulk_mid
+    assert rag_mid > 0.5 > rag_early
+    # weight schedule itself interpolates through the anchors
+    w = drifting_mix_weights(t_end)
+    assert np.argmax(w(0.0)) == 0
+    assert np.argmax(w(t_end / 3)) == 1
+    assert np.argmax(w(t_end)) == 2
+    for t in (0.0, 0.7, 1.9, t_end):
+        assert abs(sum(w(t)) - 1.0) < 1e-9
+
+
+def test_repeat_prompts_pool_within_tenant():
+    reqs = TrafficGenerator(constant(600.0), [RAG_DECODE, REPEAT_CHAT],
+                            seed=8).generate(2.0)
+    pids = {r.prompt_id for r in reqs if r.prompt_id is not None}
+    assert pids, "repeat tenant must emit pooled prompt ids"
+    assert len(pids) <= REPEAT_CHAT.prompt_pool
+    # pooled ids live outside the rid window (never collide with rids)
+    assert min(pids) >= RID_LIMIT
+    # only the repeat tenant emits them
+    assert all(r.prompt_id is None for r in reqs
+               if r.rag_interval == RAG_DECODE.rag_interval)
+
+
+def test_rid_window_is_enforced():
+    gen = TrafficGenerator(constant(400.0), [PLAIN], seed=9)
+    reqs = gen.generate(1.0, rid_base=100)
+    assert [r.rid for r in reqs] == list(range(100, 100 + len(reqs)))
+    with pytest.raises(ValueError, match="rid window"):
+        gen.generate(1.0, rid_base=RID_LIMIT - 3)
+
+
+def test_generator_input_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        TrafficGenerator(constant(1.0), [])
+    gen = TrafficGenerator(constant(200.0), [PLAIN, RAG_DECODE],
+                           seed=10, weights_fn=lambda t: (1.0,))
+    with pytest.raises(ValueError, match="arity"):
+        gen.generate(0.5)
+    bad = TrafficGenerator(constant(200.0), [PLAIN], seed=11,
+                           weights_fn=lambda t: (0.0,))
+    with pytest.raises(ValueError, match="sum to zero"):
+        bad.generate(0.5)
+
+
+def test_generate_timed_reports_and_matches():
+    gen = drifting_mix_trace(0.5, 200.0, seed=12)
+    reqs, report = generate_timed(gen, 0.5)
+    again = gen.generate(0.5)
+    assert [r.t_arrival for r in reqs] == [r.t_arrival for r in again]
+    assert report["requests"] == len(reqs)
+    assert report["tenant_users"] == sum(
+        sp.users for sp in gen.tenants)
+    assert report["gen_wall_s"] > 0
+    assert report["offered_rps"] == pytest.approx(len(reqs) / 0.5)

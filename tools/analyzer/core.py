@@ -293,6 +293,11 @@ def default_config() -> AnalyzerConfig:
              "no simulated clock exists here"),
             ("benchmarks/",
              "benchmarks time real host/device work by design"),
+            ("src/repro/serving/traffic.py",
+             "generate_timed() times real host-side trace synthesis — "
+             "wall-clock reporting on generator throughput, never fed "
+             "into sim time (arrivals are stamped in sim seconds before "
+             "the run starts)"),
         ),
     })
 
